@@ -1,0 +1,22 @@
+"""Shared helpers for the benchmark harness (one module per paper table)."""
+
+from __future__ import annotations
+
+import csv
+import io
+import sys
+from typing import Iterable, List, Tuple
+
+Row = Tuple[str, float, str]  # (name, us_per_call, derived)
+
+SIZES_SMALL_TO_LARGE = [64, 256, 1024, 2048, 4096, 8192, 16384, 65536,
+                        262144, 1 << 20, 4 << 20, 16 << 20]
+
+
+def emit(rows: Iterable[Row], header: bool = False) -> None:
+    w = csv.writer(sys.stdout)
+    if header:
+        w.writerow(["name", "us_per_call", "derived"])
+    for name, us, derived in rows:
+        w.writerow([name, f"{us:.3f}", derived])
+    sys.stdout.flush()

@@ -1,0 +1,103 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from
+the dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.experiments_tables [--mesh single]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+ARCH_ORDER = ["hymba-1.5b", "granite-moe-3b-a800m", "moonshot-v1-16b-a3b",
+              "gemma2-9b", "qwen2-7b", "llama3.2-1b", "minicpm3-4b",
+              "musicgen-medium", "mamba2-780m", "qwen2-vl-7b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str, include_variants=False):
+    recs = []
+    for p in sorted(ART.glob(f"*__{mesh}*.json")):
+        parts = p.stem.split("__")
+        if len(parts) > 3 and not include_variants:
+            continue
+        recs.append(json.loads(p.read_text()))
+    recs.sort(key=lambda d: (ARCH_ORDER.index(d["arch"]),
+                             SHAPE_ORDER.index(d["shape"])))
+    return recs
+
+
+def fmt_bytes(n):
+    return f"{n / (1 << 30):.2f}"
+
+
+def dryrun_table(mesh: str):
+    print(f"\n### Dry-run — {'16x16 single pod (256)' if mesh == 'single' else '2x16x16 two pods (512 chips)'}\n")
+    print("| arch | shape | compile s | HBM GiB/dev (tpu-est) | fits 16G | "
+          "HLO GFLOP/dev | coll GiB/dev | AR / AG / RS / A2A / CP |")
+    print("|---|---|---|---|---|---|---|---|")
+    for d in load(mesh):
+        m, c, r = d["memory"], d["collectives"], d["roofline"]
+        cts = c["counts"]
+        ops = "/".join(str(cts.get(k, 0)) for k in
+                       ("all-reduce", "all-gather", "reduce-scatter",
+                        "all-to-all", "collective-permute"))
+        print(f"| {d['arch']} | {d['shape']} | {d['compile_s']} "
+              f"| {m.get('tpu_estimate_gib', m['total_per_device_gib'])} "
+              f"| {'y' if m['fits_16gib'] else 'N'} "
+              f"| {d['cost']['flops_per_device'] / 1e9:.0f} "
+              f"| {fmt_bytes(c['total_bytes'])} | {ops} |")
+
+
+def roofline_table(mesh: str):
+    chips = 256 if mesh == "single" else 512
+    print(f"\n### Roofline — {chips} chips (v5e: 197 TF bf16, 819 GB/s HBM,"
+          " 50 GB/s/link)\n")
+    print("| arch | shape | compute s | memory s | collective s | dominant "
+          "| MODEL_FLOPs/HLO_FLOPs | note |")
+    print("|---|---|---|---|---|---|---|---|")
+    for d in load(mesh):
+        r = d["roofline"]
+        u = r["useful_compute_ratio"]
+        note = _note(d)
+        print(f"| {d['arch']} | {d['shape']} | {r['compute_s']:.4f} "
+              f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+              f"| **{r['dominant'][:-2]}** | {u:.2f} | {note} |")
+
+
+def _note(d):
+    r = d["roofline"]
+    dom = r["dominant"]
+    arch, shape = d["arch"], d["shape"]
+    if dom == "collective_s":
+        big = max(d["collectives"]["bytes"],
+                  key=d["collectives"]["bytes"].get)
+        return (f"{big} traffic dominates — aggregate buckets / manual "
+                f"RS+AG (SP) / fewer resharding boundaries")
+    if dom == "memory_s":
+        if shape in ("decode_32k", "long_500k"):
+            return "KV/state streaming — inevitable at batch-1 arithmetic " \
+                   "intensity; partitioned-KV decode removes the gather"
+        return "activation + weight streaming — bigger fusions (TPU) and " \
+               "flash-attention kernel remove score/loss round-trips"
+    return "compute-bound — MXU-limited; padding waste is the lever"
+
+
+def main():
+    mesh = "single"
+    if "--mesh" in sys.argv:
+        mesh = sys.argv[sys.argv.index("--mesh") + 1]
+    if "--both" in sys.argv:
+        for m in ("single", "multi"):
+            dryrun_table(m)
+            roofline_table(m)
+    else:
+        dryrun_table(mesh)
+        roofline_table(mesh)
+
+
+if __name__ == "__main__":
+    main()

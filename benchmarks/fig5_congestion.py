@@ -1,0 +1,31 @@
+"""Paper Fig 5: thread congestion — 32 threads, one partition each, one
+VCI.  Headline: part/many pay ~30x the single-message time at small
+sizes."""
+
+from repro.core import simulator as sim
+
+from .common import emit
+
+SIZES = [64, 512, 4096, 65536, 1 << 20]
+APPROACHES = ("pt2pt_single", "part", "pt2pt_many",
+              "rma_single_passive", "rma_many_passive")
+
+
+def rows():
+    out = []
+    for size in SIZES:
+        base = sim.simulate("pt2pt_single", n_threads=32, theta=1,
+                            part_bytes=size / 32).time_us
+        for ap in APPROACHES:
+            r = sim.simulate(ap, n_threads=32, theta=1, part_bytes=size / 32)
+            out.append((f"fig5/{ap}/{size}B", r.time_us,
+                        f"penalty={r.time_us / base:.1f}x"))
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Roofline report: aggregates the dry-run artifacts into the per-cell
+three-term table (deliverable g).  Reads artifacts/dryrun/*.json."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def rows(mesh: str = "single", include_variants: bool = False):
+    out = []
+    for path in sorted(ART.glob(f"*__{mesh}*.json")):
+        parts = path.stem.split("__")
+        if len(parts) > 3 and not include_variants:
+            continue  # perf-iteration variants live in EXPERIMENTS.md
+        d = json.loads(path.read_text())
+        r = d["roofline"]
+        total = r["compute_s"] + r["memory_s"] + r["collective_s"]
+        dom_frac = r[r["dominant"]] / total if total else 0.0
+        name = f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}"
+        if len(parts) > 3:
+            name += f"/{'__'.join(parts[3:])}"
+        out.append((name, r[r["dominant"]] * 1e6,
+                    f"dom={r['dominant'][:-2]},frac={dom_frac:.2f},"
+                    f"useful={r['useful_compute_ratio']:.2f},"
+                    f"mem_gib={d['memory'].get('tpu_estimate_gib', d['memory']['total_per_device_gib'])},"
+                    f"fits={d['memory']['fits_16gib']}"))
+    if not out:
+        out.append(("roofline/NO_ARTIFACTS", 0.0,
+                    "run: python -m repro.launch.dryrun --all"))
+    return out
+
+
+def main():
+    emit(rows())
+    emit(rows("multi"))
+
+
+if __name__ == "__main__":
+    main()

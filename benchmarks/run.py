@@ -1,0 +1,28 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Simulator-based figures run in
+milliseconds; jax_earlybird spawns an 8-device subprocess (~1 min);
+roofline_report reads the dry-run artifacts if present.
+"""
+
+import sys
+
+from . import (fig4_latency, fig5_congestion, fig6_vci, fig7_aggregation,
+               fig8_earlybird, jax_earlybird, roofline_report,
+               tableA_delayrate)
+from .common import emit
+
+
+def main() -> None:
+    emit([], header=True)
+    for mod in (tableA_delayrate, fig4_latency, fig5_congestion, fig6_vci,
+                fig7_aggregation, fig8_earlybird):
+        emit(mod.rows())
+    if "--fast" not in sys.argv:
+        emit(jax_earlybird.rows())
+    emit(roofline_report.rows())
+    emit(roofline_report.rows("multi"))
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,63 @@
+"""Serving demo: prefill a batch of prompts, then decode with a KV cache.
+
+Exercises the inference path for three architecture families (GQA, MLA,
+SSM) on CPU with reduced configs, and checks prefill/decode consistency:
+decoding the prompt's last token from a fresh prefill must give the same
+logits as incrementally decoding token by token.
+
+    PYTHONPATH=src python examples/serve_pipelined.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+
+
+def run(arch: str, prompt_len: int = 24, gen: int = 8):
+    cfg = get_smoke_config(arch)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    prompt = jax.random.randint(key, (2, prompt_len), 0, cfg.vocab)
+
+    # 1) prefill the whole prompt at once
+    logits_p, cache = lm.prefill(cfg, params, {"tokens": prompt},
+                                 cache=lm.init_cache(cfg, 2,
+                                                     prompt_len + gen))
+    # 2) incremental decode of the same prompt must agree
+    cache2 = lm.init_cache(cfg, 2, prompt_len + gen)
+    logits_i = None
+    for t in range(prompt_len):
+        logits_i, cache2 = lm.decode_step(cfg, params, cache2,
+                                          prompt[:, t], jnp.int32(t))
+    err = float(jnp.max(jnp.abs(logits_p - logits_i)))
+    assert err < 2e-2, f"{arch}: prefill/decode mismatch {err}"
+
+    # 3) greedy generation
+    toks = []
+    cache = cache2
+    tok = jnp.argmax(logits_i[:, :cfg.vocab], axis=-1).astype(jnp.int32)
+    for t in range(prompt_len, prompt_len + gen):
+        toks.append(np.asarray(tok))
+        logits, cache = lm.decode_step(cfg, params, cache, tok, jnp.int32(t))
+        tok = jnp.argmax(logits[:, :cfg.vocab], axis=-1).astype(jnp.int32)
+    print(f"  {arch:<22} prefill/decode max|dlogit|={err:.2e}  "
+          f"generated={np.stack(toks)[:, 0].tolist()}")
+
+
+def main():
+    print("serving demo (reduced configs, CPU):")
+    for arch in ("llama3.2-1b", "minicpm3-4b", "mamba2-780m", "gemma2-9b"):
+        run(arch)
+    print("prefill==incremental-decode consistency verified.")
+
+
+if __name__ == "__main__":
+    main()

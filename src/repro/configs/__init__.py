@@ -1,0 +1,41 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig.
+
+Each assigned architecture has its own module with the exact published
+config plus a reduced ``smoke_config`` exercised by per-arch CPU smoke
+tests; the full configs are touched only via the (allocation-free) dry-run.
+"""
+
+from __future__ import annotations
+
+from importlib import import_module
+
+from repro.models.lm import ModelConfig
+
+_MODULES = {
+    "hymba-1.5b": "hymba_1_5b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "gemma2-9b": "gemma2_9b",
+    "qwen2-7b": "qwen2_7b",
+    "llama3.2-1b": "llama3_2_1b",
+    "minicpm3-4b": "minicpm3_4b",
+    "musicgen-medium": "musicgen_medium",
+    "mamba2-780m": "mamba2_780m",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def _mod(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; one of {ARCH_IDS}")
+    return import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _mod(arch_id).config()
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return _mod(arch_id).smoke_config()

@@ -1,0 +1,289 @@
+"""Discrete-event simulator of the paper's pipelined-communication benchmark.
+
+The paper's quantitative claims (Figs 4-8) were measured on MeluXina
+(HDR200 IB, 1.22 us latency, 25 GB/s) with MPICH.  This container has no
+MPI cluster, so we reproduce the *benchmark itself* (Fig 3) as a
+discrete-event model whose resources mirror the MPICH/UCX stack:
+
+  * V virtual communication interfaces (VCIs) — serial injection servers.
+    Consecutive messages from the *same* thread pipeline cheaply
+    (``alpha_msg``); a thread switch on a shared VCI pays a lock-bounce
+    cost (``chi_switch``) — this is the thread-contention mechanism of
+    §4.2.1.
+  * a NIC serialization stage (``alpha_nic`` per message),
+  * the wire: one-way latency ``alpha_wire`` + shared bandwidth ``beta``,
+  * eager/bcopy/rendezvous protocol switches at 1 KiB / 8 KiB (§4.1),
+  * the old AM code path: mandatory CTS + full-buffer copy (§3.1),
+  * partitioned-path costs: per-``MPI_Pready`` atomic plus a shared-request
+    serialization per message (§3.2.2, "a few atomic updates"),
+  * RMA: puts are cheaper to inject than tag-matched sends but pay
+    extra synchronization (flush round-trip / post-start-complete-wait),
+    and many-window passive pays a progress-engine cost per window (§4.2.1).
+
+Calibration targets (validated in tests/test_simulator.py):
+  fig 4: single-message small latency ~1.2 us; part==single; old-AM worse.
+  fig 5: 32 threads, 1 VCI  -> part/many ~30x single.
+  fig 6: 32 threads, 32 VCI -> many ~= single; part ~3-4x single.
+  fig 7: 4 threads, theta=32 -> no-aggr ~10x single; aggregated ~3x.
+  fig 8: gamma=100 us/MB, N=4 -> measured gain ~2.5 (theory 2.67).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .partition import PartitionedRequest
+
+US = 1e-6
+
+APPROACHES = (
+    "part", "part_old", "pt2pt_single", "pt2pt_many",
+    "rma_single_passive", "rma_many_passive",
+    "rma_single_active", "rma_many_active",
+)
+
+
+@dataclass(frozen=True)
+class NetConfig:
+    """Cost constants of the simulated MPICH/UCX/IB stack."""
+    beta: float = 25e9            # wire bandwidth, B/s (200 Gb/s HDR)
+    beta_copy: float = 12e9       # host memcpy bandwidth (bcopy / AM copy)
+    alpha_wire: float = 0.80 * US  # one-way wire latency
+    alpha_first: float = 0.30 * US  # injection cost, idle VCI
+    alpha_msg: float = 0.10 * US  # marginal injection, same thread streak
+    chi_switch: float = 2.60 * US  # injection when the VCI's previous
+    #                                message came from another thread
+    alpha_nic: float = 0.03 * US  # per-message NIC serialization
+    alpha_put: float = 0.08 * US  # marginal injection for RMA put
+    alpha_put_first: float = 0.25 * US
+    alpha_atomic: float = 0.02 * US  # MPI_Pready atomic decrement (local)
+    alpha_bounce: float = 0.04 * US  # cache-line bounce on the shared
+    #                                  counter when several threads Pready
+    alpha_counter: float = 0.10 * US  # shared partitioned-request state
+    alpha_progress: float = 0.20 * US  # progress-engine cost per extra window
+    alpha_recv: float = 0.05 * US  # receiver-side completion processing
+    barrier_base: float = 0.05 * US
+    barrier_log: float = 0.15 * US
+    eager_max: int = 1024         # short protocol  <= 1 KiB
+    bcopy_max: int = 8192         # bcopy protocol  <= 8 KiB, then rendezvous
+
+    def barrier(self, n_threads: int) -> float:
+        if n_threads <= 1:
+            return 0.0
+        return self.barrier_base + self.barrier_log * math.log2(n_threads)
+
+
+DEFAULT_NET = NetConfig()
+
+
+@dataclass
+class SimResult:
+    time_s: float          # time-to-solution minus compute (paper's metric)
+    tts_s: float           # absolute completion time on the receiver
+    n_messages: int
+    approach: str
+
+    @property
+    def time_us(self) -> float:
+        return self.time_s / US
+
+
+class _Fabric:
+    """Serial-resource scheduler: V VCIs -> NIC -> wire."""
+
+    def __init__(self, cfg: NetConfig, n_vcis: int):
+        self.cfg = cfg
+        self.vci_free = [0.0] * max(1, n_vcis)
+        self.vci_last_thread: List[Optional[int]] = [None] * max(1, n_vcis)
+        self.nic_free = 0.0
+        self.wire_free = 0.0
+        self.n_messages = 0
+
+    def _inject_cost(self, vci: int, thread: int, put: bool) -> float:
+        cfg = self.cfg
+        last = self.vci_last_thread[vci]
+        if last is None:
+            return cfg.alpha_put_first if put else cfg.alpha_first
+        if last != thread:
+            return cfg.chi_switch
+        return cfg.alpha_put if put else cfg.alpha_msg
+
+    def transmit(self, t_ready: float, nbytes: float, vci: int, thread: int,
+                 *, put: bool = False, am_copy: bool = False) -> float:
+        """Schedule one message; returns receiver-side arrival time."""
+        cfg = self.cfg
+        vci %= len(self.vci_free)
+        inject = self._inject_cost(vci, thread, put)
+        if am_copy or (cfg.eager_max < nbytes <= cfg.bcopy_max):
+            inject += nbytes / cfg.beta_copy  # bcopy / AM intermediate copy
+        t0 = max(t_ready, self.vci_free[vci])
+        t1 = t0 + inject
+        self.vci_free[vci] = t1
+        self.vci_last_thread[vci] = thread
+        t2 = max(t1, self.nic_free) + cfg.alpha_nic
+        self.nic_free = t2
+        if not am_copy and nbytes > cfg.bcopy_max:
+            t2 += 2.0 * cfg.alpha_wire  # rendezvous RTS/CTS round trip
+        t3 = max(t2, self.wire_free) + nbytes / cfg.beta
+        self.wire_free = t3
+        self.n_messages += 1
+        return t3 + cfg.alpha_wire + cfg.alpha_recv
+
+
+def _normalize_ready(n_threads: int, theta: int,
+                     ready: Optional[Sequence]) -> np.ndarray:
+    if ready is None:
+        return np.zeros((n_threads, theta))
+    arr = np.asarray(ready, dtype=float).reshape(n_threads, theta)
+    return arr
+
+
+def simulate(approach: str, *, n_threads: int, theta: int, part_bytes: float,
+             ready=None, n_vcis: int = 1, aggr_bytes: float = 0.0,
+             cfg: NetConfig = DEFAULT_NET) -> SimResult:
+    """Run one iteration of the Fig-3 benchmark for one API variant.
+
+    ``ready[t, j]`` is the time partition j of thread t finishes compute
+    (seconds from MPI_Start).  The returned ``time_s`` subtracts the compute
+    time ``max(ready)`` — the paper's §2.1 metric.
+    """
+    if approach not in APPROACHES:
+        raise ValueError(f"unknown approach {approach!r}; one of {APPROACHES}")
+    ready = _normalize_ready(n_threads, theta, ready)
+    n_part = n_threads * theta
+    total_bytes = n_part * part_bytes
+    fab = _Fabric(cfg, n_vcis)
+    start = cfg.barrier(n_threads)  # MPI_Start + thread barrier (Fig 3)
+    compute = float(ready.max())
+
+    if approach == "pt2pt_single":
+        # Bulk synchronization: barrier until every thread is done, then one
+        # persistent send from the master thread.
+        t0 = start + compute + cfg.barrier(n_threads)
+        tts = fab.transmit(t0, total_bytes, vci=0, thread=0)
+
+    elif approach == "part_old":
+        # Original AM path (§3.1): wait for CTS, copy the whole buffer,
+        # single active message once every partition is ready.
+        t0 = start + compute + cfg.barrier(n_threads) + cfg.alpha_wire
+        tts = fab.transmit(t0, total_bytes, vci=0, thread=0, am_copy=True)
+
+    elif approach == "pt2pt_many":
+        # One duplicated communicator per thread, one persistent request per
+        # partition, issued as soon as each partition is ready.
+        arrivals = []
+        for t in range(n_threads):
+            t_free = start
+            for j in range(theta):
+                t_issue = max(t_free, start + ready[t, j])
+                arr = fab.transmit(t_issue, part_bytes,
+                                   vci=t % max(1, n_vcis), thread=t)
+                t_free = t_issue  # issue cost accounted inside the VCI queue
+                arrivals.append(arr)
+        tts = max(arrivals)
+
+    elif approach == "part":
+        # Improved MPI-4.0 partitioned path (§3.2): gcd message plan,
+        # aggregation under aggr_bytes, round-robin message->VCI mapping,
+        # per-Pready atomic + shared-request serialization per message.
+        req = PartitionedRequest(n_part, n_part, part_bytes,
+                                 aggr_bytes=aggr_bytes, n_channels=max(1, n_vcis))
+        pready = np.empty(n_part)
+        bounce_free = 0.0  # globally-serialized atomic counter cache line
+        for t in range(n_threads):
+            t_free = start
+            for j in range(theta):
+                t_done = max(t_free, start + ready[t, j]) + cfg.alpha_atomic
+                if n_threads > 1:
+                    t_done = max(t_done, bounce_free) + cfg.alpha_bounce
+                    bounce_free = t_done
+                pready[t * theta + j] = t_done
+                t_free = t_done
+        counter_free = 0.0  # shared partitioned-request state (serializing)
+        arrivals = []
+        for msg in req.messages:
+            t_ready = max(pready[p] for p in msg.partitions)
+            if n_threads > 1:
+                t_ready = max(t_ready, counter_free) + cfg.alpha_counter
+                counter_free = t_ready
+            owner = msg.partitions[-1] // theta
+            arrivals.append(fab.transmit(t_ready, msg.nbytes,
+                                         vci=msg.channel, thread=owner))
+        tts = max(arrivals) + cfg.barrier(n_threads)  # barrier before MPI_Wait
+
+    elif approach in ("rma_single_passive", "rma_many_passive",
+                      "rma_single_active", "rma_many_active"):
+        many = approach.startswith("rma_many")
+        active = approach.endswith("active")
+        arrivals = []
+        flush_done = start
+        for t in range(n_threads):
+            vci = (t % max(1, n_vcis)) if many else 0
+            t_free = start
+            if active:
+                # MPI_Start on the origin waits for the target's MPI_Post
+                # exposure message (0B) — steady state: one wire latency.
+                t_free += cfg.alpha_wire
+            for j in range(theta):
+                t_issue = max(t_free, start + ready[t, j])
+                arr = fab.transmit(t_issue, part_bytes, vci=vci, thread=t,
+                                   put=True)
+                t_free = t_issue
+                arrivals.append(arr)
+            last = max(arrivals[-theta:])
+            if active:
+                # MPI_Complete: 0B sync message closing the access epoch.
+                done = fab.transmit(last, 0.0, vci=vci, thread=t)
+            else:
+                # MPI_Win_flush round trip + 0B completion send.
+                done = fab.transmit(last + 2.0 * cfg.alpha_wire, 0.0,
+                                    vci=vci, thread=t)
+            flush_done = max(flush_done, done)
+        tts = flush_done
+        if many:
+            # Receiver progress engine polls one window per thread (§4.2.1).
+            tts += cfg.alpha_progress * n_threads
+        tts += cfg.barrier(n_threads)
+
+    else:  # pragma: no cover
+        raise AssertionError(approach)
+
+    return SimResult(time_s=tts - compute, tts_s=tts,
+                     n_messages=fab.n_messages, approach=approach)
+
+
+def sweep_sizes(approach: str, sizes: Sequence[int], **kw) -> Dict[int, SimResult]:
+    """Run ``simulate`` across total-buffer sizes (bytes)."""
+    out = {}
+    n_part = kw["n_threads"] * kw["theta"]
+    for s in sizes:
+        out[s] = simulate(approach, part_bytes=s / n_part,
+                          **{k: v for k, v in kw.items() if k != "part_bytes"})
+    return out
+
+
+def delayed_ready(n_threads: int, theta: int, part_bytes: float,
+                  gamma_us_per_mb: float) -> np.ndarray:
+    """Fig-8 scenario: the last partition is delayed by gamma * S_part."""
+    ready = np.zeros((n_threads, theta))
+    ready[-1, -1] = gamma_us_per_mb * 1e-12 * part_bytes
+    return ready
+
+
+def sampled_ready(workload, n_threads: int, theta: int, part_bytes: float,
+                  seed: int = 0) -> np.ndarray:
+    """Appendix-A scenario: per-partition compute time mu*S*N(1, sigma),
+    accumulated sequentially on each thread."""
+    rng = np.random.default_rng(seed)
+    per = workload.mu_s_per_b * part_bytes * rng.normal(
+        1.0, max(workload.sigma, 0.0), size=(n_threads, theta))
+    return np.maximum(per, 0.0).cumsum(axis=1)
+
+
+def theoretical_time(total_bytes: float, cfg: NetConfig = DEFAULT_NET) -> float:
+    """The 'theoretical bandwidth' reference line of Fig 4."""
+    return total_bytes / cfg.beta

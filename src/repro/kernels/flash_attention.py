@@ -1,0 +1,143 @@
+"""Pallas TPU flash attention (blockwise, online softmax).
+
+TPU adaptation notes (vs the CUDA flash-attention algorithm):
+  * tiling is chosen for VMEM residency and MXU alignment — block_q x d and
+    block_k x d tiles with d in {64, 128, 256} keep every matmul operand a
+    multiple of the 128-lane MXU width;
+  * the kv loop is the *innermost grid dimension*: TPU grids execute
+    sequentially minor-to-major, so the running (m, l, acc) state lives in
+    VMEM scratch across kv steps — no atomics/shared-memory handshakes as
+    on GPU, the systolic pipeline is kept busy by the grid;
+  * GQA is handled in the BlockSpec index_map (kv head = q head // group),
+    so expanded K/V are never materialized in HBM.
+
+Supports: causal masking, sliding window, logit softcap (gemma2), GQA.
+Validated in interpret mode against kernels.ref.flash_attention_ref.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_BIG = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, softcap: Optional[float], causal: bool,
+            window: int, block_q: int, block_k: int, n_k: int,
+            valid_len: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_BIG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)            # (block_q, d)
+    k = k_ref[0].astype(jnp.float32)            # (block_k, d)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    rows = (pl.program_id(1) * block_q
+            + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0))
+    cols = (ki * block_k
+            + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1))
+    mask = cols < valid_len
+    if causal:
+        mask &= cols <= rows
+    if window > 0:
+        mask &= (rows - cols) < window
+    s = jnp.where(mask, s, NEG_BIG)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=1)
+    acc = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D) with Hkv | H.
+
+    Returns (B, H, Sq, D).  Sq/Sk are padded to block multiples internally;
+    ``scale`` defaults to D**-0.5.
+    """
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    scale = d ** -0.5 if scale is None else scale
+
+    block_q = min(block_q, max(sq, 8))
+    block_k = min(block_k, max(sk, 8))
+    pad_q = (-sq) % block_q
+    pad_k = (-sk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    sq_p, sk_p = sq + pad_q, sk + pad_k
+    n_q, n_k = sq_p // block_q, sk_p // block_k
+
+    qf = q.reshape(b * h, sq_p, d)
+    kf = k.reshape(b * hkv, sk_p, d)
+    vf = v.reshape(b * hkv, sk_p, d)
+
+    def kv_index(bh, qi, ki):
+        # q head -> kv head: (batch * hkv) + (head // group)
+        return ((bh // h) * hkv + (bh % h) // group, ki, 0)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, softcap=softcap, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_k=n_k, valid_len=sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), kv_index),
+            pl.BlockSpec((1, block_k, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d),
+                               lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out.reshape(b, h, sq_p, d)
+    return out[:, :, :sq, :] if pad_q else out

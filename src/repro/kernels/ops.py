@@ -1,0 +1,54 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container every wrapper runs the kernel in interpret mode
+(``REPRO_PALLAS_INTERPRET=1`` default here); on a real TPU deployment the
+flag flips off and the same call sites emit Mosaic kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import bucket_pack as _bp
+from . import flash_attention as _fa
+from . import quant8 as _q8
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale,
+                               block_q=block_q, block_k=block_k,
+                               interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype",))
+def bucket_pack(leaves: Sequence[jax.Array], out_dtype=None):
+    return _bp.bucket_pack(list(leaves), out_dtype=out_dtype,
+                           interpret=INTERPRET)
+
+
+@jax.jit
+def bucket_unpack(flat, templates):
+    return _bp.bucket_unpack(flat, templates, interpret=INTERPRET)
+
+
+@jax.jit
+def quantize_blockwise(x):
+    return _q8.quantize_blockwise(x, interpret=INTERPRET)
+
+
+@jax.jit
+def dequantize_blockwise(q, scales):
+    return _q8.dequantize_blockwise(q, scales, interpret=INTERPRET)

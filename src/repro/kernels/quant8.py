@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: blockwise int8 quantize / dequantize.
+
+Gradient-compression hot path: symmetric per-block (256-element) int8
+quantization.  Blockwise scales keep the quantization error local (a large
+outlier only degrades its own block), and the block size of 256 = 2 x 128
+lanes keeps reductions register-friendly on the VPU.
+
+grid = (n_tiles,): each step quantizes a (TILE_BLOCKS, 256) tile held in
+VMEM; max-reduction and scaling stay on-chip, only int8 values + f32
+scales return to HBM (4.06x byte reduction for f32 inputs).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256          # elements per quantization block
+TILE_BLOCKS = 64     # blocks handled per grid step (64*256*4B = 64 KiB)
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)            # (TILE_BLOCKS, BLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=1), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)
+    o_ref[...] = q * s_ref[...][:, None]
+
+
+def _pad_to_tiles(x: jax.Array) -> Tuple[jax.Array, int]:
+    n = x.shape[0]
+    tile = BLOCK * TILE_BLOCKS
+    pad = (-n) % tile
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    return x, n
+
+
+def quantize_blockwise(x: jax.Array, *, interpret: bool = False
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Flat x -> (int8 values (padded to len(x)), f32 scales per 256-block).
+
+    Semantics match ref.quantize_blockwise_ref for len(x) % 256 == 0.
+    """
+    assert x.ndim == 1
+    xp, n = _pad_to_tiles(x)
+    rows = xp.shape[0] // BLOCK
+    xt = xp.reshape(rows, BLOCK)
+    n_tiles = rows // TILE_BLOCKS
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((TILE_BLOCKS, BLOCK), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((TILE_BLOCKS, BLOCK), lambda i: (i, 0)),
+                   pl.BlockSpec((TILE_BLOCKS,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((rows, BLOCK), jnp.int8),
+                   jax.ShapeDtypeStruct((rows,), jnp.float32)],
+        interpret=interpret,
+    )(xt)
+    return q.reshape(-1)[:n], s[:(n + BLOCK - 1) // BLOCK]
+
+
+def dequantize_blockwise(q: jax.Array, scales: jax.Array, *,
+                         interpret: bool = False) -> jax.Array:
+    """Inverse of quantize_blockwise; returns f32 of len(q)."""
+    assert q.ndim == 1
+    qp, n = _pad_to_tiles(q)
+    rows = qp.shape[0] // BLOCK
+    sp = jnp.pad(scales, (0, rows - scales.shape[0]))
+    n_tiles = rows // TILE_BLOCKS
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((TILE_BLOCKS, BLOCK), lambda i: (i, 0)),
+                  pl.BlockSpec((TILE_BLOCKS,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((TILE_BLOCKS, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, BLOCK), jnp.float32),
+        interpret=interpret,
+    )(qp.reshape(rows, BLOCK), sp)
+    return out.reshape(-1)[:n]

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_BIG = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        softcap: Optional[float] = None,
+                        scale: Optional[float] = None) -> jax.Array:
+    """q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D).  Exact softmax attention."""
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = h // hkv
+    scale = d ** -0.5 if scale is None else scale
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    rows = jnp.arange(sq)[:, None]
+    cols = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= cols <= rows
+    if window > 0:
+        mask &= (rows - cols) < window
+    s = jnp.where(mask, s, NEG_BIG)
+    # match the kernel exactly: masked entries contribute 0, fully-masked
+    # rows output 0 (never happens with causal self-attention)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(mask, jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p / jnp.maximum(l, 1e-30),
+                     v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def bucket_pack_ref(leaves: Sequence[jax.Array],
+                    out_dtype=None) -> jax.Array:
+    """Flatten + (optionally cast) + concatenate."""
+    parts = [jnp.ravel(l) for l in leaves]
+    if out_dtype is not None:
+        parts = [p.astype(out_dtype) for p in parts]
+    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+
+def bucket_unpack_ref(flat: jax.Array, templates: Sequence[jax.Array]
+                      ) -> List[jax.Array]:
+    out = []
+    off = 0
+    for t in templates:
+        n = t.size
+        out.append(flat[off:off + n].reshape(t.shape).astype(t.dtype))
+        off += n
+    return out
+
+
+def quantize_blockwise_ref(x: jax.Array, block: int = 256
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Flat x -> (int8 values, per-block f32 scales).  len(x) % block == 0."""
+    xb = x.astype(jnp.float32).reshape(-1, block)
+    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=1), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale
+
+
+def dequantize_blockwise_ref(q: jax.Array, scale: jax.Array,
+                             block: int = 256) -> jax.Array:
+    qb = q.reshape(-1, block).astype(jnp.float32)
+    return (qb * scale[:, None]).reshape(-1)

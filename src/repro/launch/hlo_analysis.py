@@ -1,0 +1,320 @@
+"""Parse compiled HLO text: collective bytes, op counts, loop multipliers.
+
+``compiled.cost_analysis()`` has no collective term, so we sum the result
+shapes of every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute in the partitioned (per-device) module.  Collectives
+inside while-loop bodies (the backward scan!) execute trip-count times —
+we recover trip counts from the loop-condition constants and multiply.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?P<type>\([^=]*?\)|[\w\[\],{}\s/*]+?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(")
+_WHILE_RE = re.compile(
+    r"while\([^)]*\), condition=(?P<cond>[%\w.\-]+), body=(?P<body>[%\w.\-]+)")
+_CALL_RE = re.compile(r"(?:to_apply|calls)=(?P<callee>[%\w.\-]+)")
+
+
+def _split_computations(txt: str) -> Tuple[Dict[str, str], str]:
+    comps: Dict[str, List[str]] = {}
+    entry = ""
+    cur = None
+    for line in txt.splitlines():
+        m = re.match(r"^(ENTRY\s+)?(%[\w\).\-\(]+|[\w.\-]+)\s*"
+                     r"(?:\(.*\))?.*\{\s*$", line)
+        if m and not line.startswith(" "):
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+        elif cur is not None:
+            comps[cur].append(line)
+    return {k: "\n".join(v) for k, v in comps.items()}, entry
+
+
+def _trip_count(cond_text: str) -> int:
+    """Trip count heuristic: largest integer constant in the condition."""
+    consts = [int(c) for c in
+              re.findall(r"constant\((\d+)\)", cond_text)]
+    return max(consts) if consts else 1
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(?P<name>%[\w.\-]+)\s*=\s*"
+    r"(?P<type>\([^=]*?\)|[\w\[\],{}\s/*]+?)\s+"
+    r"(?P<op>[\w\-]+)\((?P<args>.*)$")
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"(%[\w.\-]+)")
+
+# ops whose operands/outputs are NOT HBM traffic at this level
+_NO_TRAFFIC_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id",
+    "replica-id", "iota", "custom-call",
+}
+
+
+@dataclass
+class HloStats:
+    """Per-device statistics with while-loop trip-count multipliers."""
+    counts: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    bytes_: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0      # upper bound: operands+outputs, all ops
+    hbm_bytes_min: float = 0.0  # lower bound: outputs only, excluding pure
+    #                             data-movement ops (copy/convert/bitcast/
+    #                             broadcast/transpose/reshape) — these are
+    #                             dominated by XLA-CPU legalization copies
+    #                             that do not exist in TPU programs
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.counts.values())
+
+    def to_dict(self) -> Dict:
+        return {"counts": dict(self.counts), "bytes": dict(self.bytes_),
+                "total_bytes": self.total_bytes,
+                "total_count": self.total_count,
+                "dot_flops": self.dot_flops, "hbm_bytes": self.hbm_bytes,
+                "hbm_bytes_min": self.hbm_bytes_min}
+
+
+CollectiveStats = HloStats  # back-compat alias
+
+
+def _multipliers(comps: Dict[str, str], entry: str
+                 ) -> Tuple[Dict[str, int], Dict[str, int]]:
+    """(multiplier per computation, parent multiplier per computation).
+
+    The parent multiplier of a while body is its caller's multiplier —
+    the right factor for loop-INVARIANT reads (e.g. stacked layer weights
+    carried through a scan: the full array is read once per outer call,
+    only a slice per iteration)."""
+    mult: Dict[str, int] = defaultdict(int)
+    parent: Dict[str, int] = defaultdict(lambda: 1)
+    mult[entry] = 1
+    for _ in range(len(comps)):
+        changed = False
+        for name, txt in comps.items():
+            m = mult.get(name, 0)
+            if m == 0:
+                continue
+            for w in _WHILE_RE.finditer(txt):
+                trip = _trip_count(comps.get(w.group("cond"), ""))
+                body, cond = w.group("body"), w.group("cond")
+                for callee, f in ((body, max(trip, 1)), (cond, max(trip, 1))):
+                    if mult[callee] < m * f:
+                        mult[callee] = m * f
+                        parent[callee] = m
+                        changed = True
+            for c in _CALL_RE.finditer(txt):
+                callee = c.group("callee")
+                if callee in comps and mult[callee] < m:
+                    mult[callee] = m
+                    parent[callee] = m
+                    changed = True
+        if not changed:
+            break
+    return mult, parent
+
+
+_GTE_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*[^=\n]+?"
+                     r"get-tuple-element\((%[\w.\-]+)\), index=(\d+)",
+                     re.MULTILINE)
+_ROOT_TUPLE_RE = re.compile(r"ROOT\s+%[\w.\-]+\s*=\s*\([^=]*?\)\s*"
+                            r"tuple\((?P<args>[^)]*)\)")
+
+
+def _invariant_names(body_txt: str) -> set:
+    """Names of GTEs in a while body that are passed through unchanged
+    (loop-invariant carries: stacked weights, windows, caches-in)."""
+    gtes = {}   # name -> (source, index)
+    for m in _GTE_RE.finditer(body_txt):
+        gtes[m.group(1)] = (m.group(2), int(m.group(3)))
+    rt = _ROOT_TUPLE_RE.search(body_txt)
+    if not rt:
+        return set()
+    args = _OPERAND_RE.findall(rt.group("args"))  # robust to /*index=N*/
+    invariant = set()
+    for idx, arg in enumerate(args):
+        if arg in gtes and gtes[arg][1] == idx:
+            invariant.add(arg)
+    return invariant
+
+
+def _fusion_bodies(comps: Dict[str, str]) -> set:
+    """Computations called via fusion(...) — internal traffic is VMEM."""
+    fused = set()
+    for txt in comps.values():
+        for line in txt.splitlines():
+            if " fusion(" in line:
+                m = _CALL_RE.search(line)
+                if m:
+                    fused.add(m.group("callee"))
+    return fused
+
+
+def _symbols(txt: str) -> Dict[str, str]:
+    """instruction name -> result type string, within one computation."""
+    out = {}
+    for line in txt.splitlines():
+        m = _INSTR_RE.match(line)
+        if m:
+            out[m.group("name")] = m.group("type")
+        pm = re.match(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*"
+                      r"(\([^=]*?\)|[\w\[\],{}\s/*]+?)\s+parameter\(", line)
+        if pm:
+            out[pm.group(1)] = pm.group(2)
+    return out
+
+
+def _dot_flops(line: str, symbols: Dict[str, str]) -> float:
+    """2 * prod(output dims) * prod(contracting dims of lhs)."""
+    m = _INSTR_RE.match(line)
+    if not m:
+        return 0.0
+    out_dims = []
+    sm = _SHAPE_RE.search(m.group("type"))
+    if sm and sm.group(2):
+        out_dims = [int(d) for d in sm.group(2).split(",")]
+    cd = _DOT_DIMS_RE.search(line)
+    contract = [int(d) for d in cd.group(1).split(",")] if cd and cd.group(1) \
+        else []
+    ops = _OPERAND_RE.findall(m.group("args"))
+    if not ops:
+        return 0.0
+    lhs_type = symbols.get(ops[0], "")
+    lm = _SHAPE_RE.search(lhs_type)
+    if not lm or not lm.group(2):
+        return 0.0
+    lhs_dims = [int(d) for d in lm.group(2).split(",")]
+    k = 1
+    for d in contract:
+        if d < len(lhs_dims):
+            k *= lhs_dims[d]
+    n_out = 1
+    for d in out_dims:
+        n_out *= d
+    return 2.0 * n_out * k
+
+
+def analyze_hlo(hlo_text: str) -> HloStats:
+    """Collective traffic + dot FLOPs + HBM-traffic proxy, per device.
+
+    XLA's HloCostAnalysis counts while bodies ONCE; we multiply by the
+    loop trip count recovered from the condition constant, which is what
+    makes scanned-layer programs (every model here) analyzable.
+    HBM bytes are counted at fusion boundaries (operands + outputs of
+    top-level ops in non-fused computations) — the same convention as
+    cost_analysis()'s 'bytes accessed', loop-corrected.
+    """
+    comps, entry = _split_computations(hlo_text)
+    mult, parent = _multipliers(comps, entry)
+    fused = _fusion_bodies(comps)
+
+    stats = HloStats()
+    for name, txt in comps.items():
+        m = mult.get(name, 0) or 1
+        pm = parent.get(name, m)
+        in_loop_body = m != pm
+        invariant = _invariant_names(txt) if in_loop_body else set()
+        gtes = ({g.group(1) for g in _GTE_RE.finditer(txt)}
+                if in_loop_body else set())
+        symbols = _symbols(txt)
+        in_fusion = name in fused
+        for line in txt.splitlines():
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            op = im.group("op")
+            if op in ("dot", "convolution"):
+                stats.dot_flops += m * _dot_flops(line, symbols)
+            cm = _OP_RE.search(line)
+            if cm:
+                kind = cm.group("op")
+                nbytes = shape_bytes(cm.group("type"))
+                stats.counts[kind] += m
+                stats.bytes_[kind] += m * nbytes
+            if in_fusion or op in _NO_TRAFFIC_OPS:
+                continue
+            # Output bytes at the loop multiplier.  Operand reads of loop
+            # carries are subtle:
+            #   * invariant carries (stacked weights): sliced per
+            #     iteration, read fully once per outer call -> parent mult;
+            #   * variant carries (KV caches, hidden states): each
+            #     iteration touches a slice, so cap the per-iteration read
+            #     at 2x the consuming op's output (exact for elementwise
+            #     and slice/update patterns; conservative for reductions).
+            out_b = shape_bytes(im.group("type"))
+            if op not in ("copy", "convert", "bitcast", "broadcast",
+                          "transpose", "reshape", "reduce-window"):
+                # in-place-update pattern (dynamic-update-slice and DUS
+                # fusions): output dims match a destination operand's dims
+                # and smaller operands exist -> only the update slice
+                # actually moves.
+                out_dims = _SHAPE_RE.search(im.group("type"))
+                out_dims = out_dims.group(2) if out_dims else ""
+                ops_dims = []
+                for operand in _OPERAND_RE.findall(im.group("args")):
+                    t = symbols.get(operand, "")
+                    dm = _SHAPE_RE.search(t)
+                    ops_dims.append((dm.group(2) if dm else "",
+                                     shape_bytes(t)))
+                same = [b for dm, b in ops_dims if dm == out_dims and b > 0]
+                others = [b for dm, b in ops_dims if dm != out_dims]
+                if same and others and out_b > 0:
+                    eff = 2 * max(sum(others), 1)
+                    stats.hbm_bytes_min += m * min(eff, 2 * out_b)
+                else:
+                    stats.hbm_bytes_min += 2 * m * out_b
+            nbytes = m * out_b
+            for operand in _OPERAND_RE.findall(im.group("args")):
+                ob = shape_bytes(symbols.get(operand, ""))
+                if operand in invariant:
+                    nbytes += pm * ob
+                elif operand in gtes:
+                    nbytes += m * min(ob, 2 * out_b)
+                else:
+                    nbytes += m * ob
+            stats.hbm_bytes += nbytes
+    return stats
+
+
+def collective_stats(hlo_text: str) -> HloStats:
+    return analyze_hlo(hlo_text)

@@ -1,0 +1,280 @@
+"""Attention mixers: GQA (sliding window, softcap, M-RoPE) and MLA.
+
+All attention goes through ``masked_attention``, which scans over *query
+chunks* so the (B, H, Sq, Sk) score matrix never materializes — at 32k
+context a naive softmax would need ~8 GB/chip of scores.  Each chunk's
+softmax is exact (full key range), so this is numerically identical to the
+reference formulation; the Pallas flash-attention kernel
+(repro.kernels.flash_attention) is the TPU-tiled version of the same
+contraction.
+
+Head-count padding for tensor parallelism: query heads may be padded up to
+a multiple of the TP degree; padded slots are zero-initialized in both the
+input and output projections so the layer output equals the logical
+head-count output exactly.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense_init, rms_norm, softcap
+
+NEG_INF = -2.3819763e38  # most-negative bf16-representable
+
+
+def head_to_kv_map(n_heads: int, n_kv: int, n_heads_padded: int) -> Tuple[int, ...]:
+    """Static q-head -> kv-head assignment; padded heads map to kv 0."""
+    group = n_heads // n_kv
+    return tuple((h // group) if h < n_heads else 0
+                 for h in range(n_heads_padded))
+
+
+def _mask(q_pos, k_pos, window):
+    """Boolean (…, Sq, Sk): causal + optional sliding window (<=0: global)."""
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    m = k <= q
+    window = jnp.asarray(window)
+    return m & jnp.where(window > 0, (q - k) < window, True)
+
+
+def _attn_block(q, k, v, q_pos, k_pos, window, cap, scale, out_dtype):
+    """q: (B,Sq,H,D); k/v: (B,Sk,Kv,D) with Kv | H — grouped einsums, the
+    expanded (B,Sk,H,D) KV is never materialized (at 32k decode that
+    expansion was ~2 GiB x2 per layer)."""
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, d)
+    # f32 accumulation via preferred_element_type: casting the result
+    # instead makes XLA convert the OPERANDS to f32 — measured to
+    # materialize a full f32 copy of the KV cache on decode cells.
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * scale
+    scores = softcap(scores, cap)
+    if q_pos.ndim == 1:
+        m = _mask(q_pos, k_pos, window)[None, None, None]
+    else:  # per-batch positions (decode)
+        m = _mask(q_pos, k_pos[None, :], window)[:, None, None]
+    scores = jnp.where(m, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(out_dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, h, -1)
+
+
+def masked_attention(q, k, v, *, q_pos, k_pos, window=0,
+                     attn_softcap: Optional[float] = None,
+                     scale: float, q_chunk: int = 512) -> jax.Array:
+    """q: (B,Sq,H,Dk), k: (B,Sk,Kv,Dk), v: (B,Sk,Kv,Dv), Kv | H (uniform
+    grouping: q head i attends kv head i // (H/Kv)) -> (B,Sq,H,Dv).
+
+    Scans over query chunks; each chunk sees the full key range, so the
+    softmax is exact.
+    """
+    b, sq, h, dk = q.shape
+    if sq <= q_chunk or sq % q_chunk != 0 or q_pos.ndim > 2:
+        return _attn_block(q, k, v, q_pos, k_pos, window, attn_softcap,
+                           scale, q.dtype)
+    nc = sq // q_chunk
+    qs = q.reshape(b, nc, q_chunk, h, dk).transpose(1, 0, 2, 3, 4)
+    if q_pos.ndim == 1:
+        ps = q_pos.reshape(nc, q_chunk)
+    else:  # per-batch positions (e.g. M-RoPE): (B, Sq) -> (nc, B, qc)
+        ps = q_pos.reshape(b, nc, q_chunk).transpose(1, 0, 2)
+
+    def body(_, xs):
+        qc, pc = xs
+        return (), _attn_block(qc, k, v, pc, k_pos, window, attn_softcap,
+                               scale, q.dtype)
+
+    _, out = jax.lax.scan(body, (), (qs, ps))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, -1)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_attention(key, *, d_model: int, n_heads: int, n_heads_padded: int,
+                   n_kv: int, head_dim: int, qkv_bias: bool, dtype) -> Dict:
+    ks = jax.random.split(key, 4)
+    wq = dense_init(ks[0], d_model, (n_heads_padded, head_dim), dtype)
+    wo = dense_init(ks[3], n_heads_padded * head_dim, (d_model,), dtype
+                    ).reshape(n_heads_padded, head_dim, d_model)
+    if n_heads_padded > n_heads:  # zero padded slots -> exact logical output
+        wq = wq.at[:, n_heads:, :].set(0.0)
+        wo = wo.at[n_heads:, :, :].set(0.0)
+    p = {
+        "wq": wq,
+        "wk": dense_init(ks[1], d_model, (n_kv, head_dim), dtype),
+        "wv": dense_init(ks[2], d_model, (n_kv, head_dim), dtype),
+        "wo": wo,
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads_padded, head_dim), dtype)
+        p["bk"] = jnp.zeros((n_kv, head_dim), dtype)
+        p["bv"] = jnp.zeros((n_kv, head_dim), dtype)
+    return p
+
+
+def attention_fwd(p: Dict, x: jax.Array, *, positions: jax.Array,
+                  head_map: Tuple[int, ...], window=0,
+                  attn_softcap: Optional[float] = None,
+                  rope_theta: float = 1e4,
+                  mrope_sections: Optional[Tuple[int, ...]] = None,
+                  q_scale: Optional[float] = None,
+                  cache: Optional[Dict] = None,
+                  cache_pos: Optional[jax.Array] = None,
+                  q_chunk: int = 512,
+                  decode_attn=None,
+                  ) -> Tuple[jax.Array, Optional[Dict]]:
+    """GQA attention.
+
+    ``decode_attn(q (B,H,D), k (B,S,Kv,D), v, pos, window) -> (B,H,D)``:
+    optional partitioned-KV decode path (shard_map flash decode) used for
+    single-token steps when provided.
+
+    x: (B, S, D).  positions: (B, S), (S,)-broadcastable, or (3, B, S) for
+    M-RoPE.  cache: {'k','v'}: (B, S_max, n_kv, head_dim) with scalar write
+    offset ``cache_pos``.
+    """
+    head_dim = p["wq"].shape[-1]
+    scale = q_scale if q_scale is not None else head_dim ** -0.5
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+
+    q = apply_rope(q, positions, rope_theta, mrope_sections)
+    k = apply_rope(k, positions, rope_theta, mrope_sections)
+    tpos = positions if mrope_sections is None else positions[0]
+
+    if cache is not None:
+        assert cache_pos is not None
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+        cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+        k_pos = jnp.arange(k.shape[1])
+        q_pos = tpos if tpos.ndim >= 1 else tpos[None]
+    else:
+        k_pos = jnp.arange(k.shape[1])
+        q_pos = jnp.arange(q.shape[1])
+
+    n_kv = k.shape[2]
+    h_padded = q.shape[2]
+    uniform = (h_padded % n_kv == 0 and
+               tuple(head_map) == tuple(i // (h_padded // n_kv)
+                                        for i in range(h_padded)))
+    if (decode_attn is not None and cache is not None and q.shape[1] == 1
+            and uniform):
+        out = decode_attn(q[:, 0], k, v, pos=cache_pos + 0,
+                          window=window, attn_softcap=attn_softcap,
+                          scale=scale)
+        out = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None, :]
+        return out, cache
+    if uniform:
+        # grouped path: no expanded-KV materialization
+        k_att, v_att = k, v
+    else:
+        # padded/non-uniform head map (e.g. qwen2's 28->32): fall back to
+        # explicit expansion via gather
+        hm = jnp.asarray(head_map, dtype=jnp.int32)
+        k_att = jnp.take(k, hm, axis=2)
+        v_att = jnp.take(v, hm, axis=2)
+
+    out = masked_attention(q, k_att, v_att, q_pos=q_pos, k_pos=k_pos,
+                           window=window, attn_softcap=attn_softcap,
+                           scale=scale, q_chunk=q_chunk)
+    out = jnp.einsum("bqhk,hkd->bqd", out, p["wo"])
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# Multi-head latent attention (MiniCPM3 / DeepSeek-V2 style)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, *, d_model: int, n_heads_padded: int, n_heads: int,
+             q_lora: int, kv_lora: int, qk_nope: int, qk_rope: int,
+             v_dim: int, dtype) -> Dict:
+    ks = jax.random.split(key, 7)
+    w_uq = dense_init(ks[1], q_lora, (n_heads_padded, qk_nope + qk_rope), dtype)
+    wo = dense_init(ks[6], n_heads_padded * v_dim, (d_model,), dtype
+                    ).reshape(n_heads_padded, v_dim, d_model)
+    if n_heads_padded > n_heads:
+        w_uq = w_uq.at[:, n_heads:, :].set(0.0)
+        wo = wo.at[n_heads:, :, :].set(0.0)
+    return {
+        "w_dq": dense_init(ks[0], d_model, (q_lora,), dtype),
+        "norm_q": jnp.ones((q_lora,), dtype),
+        "w_uq": w_uq,
+        "w_dkv": dense_init(ks[2], d_model, (kv_lora,), dtype),
+        "norm_kv": jnp.ones((kv_lora,), dtype),
+        "w_uk": dense_init(ks[3], kv_lora, (n_heads_padded, qk_nope), dtype),
+        "w_uv": dense_init(ks[4], kv_lora, (n_heads_padded, v_dim), dtype),
+        "w_kr": dense_init(ks[5], d_model, (qk_rope,), dtype),
+        "wo": wo,
+    }
+
+
+def mla_fwd(p: Dict, x: jax.Array, *, positions: jax.Array, qk_nope: int,
+            qk_rope: int, rope_theta: float = 1e4, window=0,
+            cache: Optional[Dict] = None,
+            cache_pos: Optional[jax.Array] = None, q_chunk: int = 512,
+            ) -> Tuple[jax.Array, Optional[Dict]]:
+    """MLA: the KV cache stores only the compressed latent + shared rope key.
+
+    cache: {'ckv': (B, S_max, kv_lora), 'kr': (B, S_max, qk_rope)}.
+    MLA's latent is itself an *aggregated* per-token buffer — the
+    architecture-level cousin of the paper's message aggregation.
+    """
+    scale = (qk_nope + qk_rope) ** -0.5
+    cq = rms_norm(x @ p["w_dq"], p["norm_q"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    ckv = rms_norm(x @ p["w_dkv"], p["norm_kv"])          # (B, S, r)
+    kr = apply_rope((x @ p["w_kr"])[:, :, None, :], positions,
+                    rope_theta)[:, :, 0, :]               # (B, S, qk_rope)
+
+    if cache is not None:
+        assert cache_pos is not None
+        ckv_full = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache_pos, 0))
+        kr_full = jax.lax.dynamic_update_slice(
+            cache["kr"], kr.astype(cache["kr"].dtype), (0, cache_pos, 0))
+        cache = {"ckv": ckv_full, "kr": kr_full}
+        ckv_att, kr_att = ckv_full, kr_full
+        k_pos = jnp.arange(ckv_full.shape[1])
+        q_pos = positions if positions.ndim >= 1 else positions[None]
+    else:
+        ckv_att, kr_att = ckv, kr
+        k_pos = jnp.arange(ckv.shape[1])
+        q_pos = jnp.arange(x.shape[1])
+
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv_att, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", ckv_att, p["w_uv"])
+
+    # Fold the shared rope key into the head dim so one attention call works:
+    # scores = q_nope . k_nope + q_rope . kr
+    h = q.shape[2]
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kr_b = jnp.broadcast_to(kr_att[:, :, None, :],
+                            (*kr_att.shape[:2], h, qk_rope))
+    k_cat = jnp.concatenate([k_nope, kr_b], axis=-1)
+
+    out = masked_attention(q_cat, k_cat, v, q_pos=q_pos, k_pos=k_pos,
+                           window=window, attn_softcap=None, scale=scale,
+                           q_chunk=q_chunk)
+    out = jnp.einsum("bqhk,hkd->bqd", out, p["wo"])
+    return out, cache

@@ -1,0 +1,500 @@
+"""Full language model: config, init, forward, loss, prefill, decode.
+
+A single ``ModelConfig`` covers all 10 assigned architectures (dense GQA,
+MLA, MoE, SSM, hybrid, audio/vision-stub frontends).  Layers are stacked on
+a leading L axis and executed with ``jax.lax.scan`` (optionally remat'ed),
+which keeps compile time flat in depth and is the structural hook for the
+paper's technique: per-layer gradient collectives issued *inside* the
+backward scan (see repro.core.earlybird).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .attention import head_to_kv_map, init_attention, init_mla
+from .blocks import block_fwd
+from .layers import chunked_cross_entropy, embed_init, rms_norm, softcap
+from .mamba import MambaConfig, init_mamba, init_mamba_cache
+from .moe import MoEConfig, init_moe
+
+MODEL_AXIS = "model"
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    q_lora: int = 768
+    kv_lora: int = 256
+    qk_nope: int = 64
+    qk_rope: int = 32
+    v_dim: int = 64
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    vocab: int
+    n_heads: int = 0            # 0 for attention-free archs
+    n_kv: int = 0
+    d_ff: int = 0               # dense FFN hidden; 0 = no FFN (mamba2)
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    mixer: str = "attn"         # attn | mamba | hybrid
+    qkv_bias: bool = False
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    rope_theta: float = 1e4
+    mrope_sections: Optional[Tuple[int, int, int]] = None
+    # per-layer windows: "global" | "gemma_alt" | "hymba"
+    window_pattern: str = "global"
+    window_size: int = 0
+    post_norm: bool = False
+    tie_embeddings: bool = False
+    zero_centered_norm: bool = False
+    emb_scale: bool = False     # gemma: embeddings scaled by sqrt(d_model)
+    frontend: str = "tokens"    # tokens | audio_stub | vision_stub
+    mla: Optional[MLAConfig] = None
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[MambaConfig] = None
+    q_scale: Optional[float] = None
+    q_chunk: int = 512
+    loss_chunk: int = 512
+    tp_pad: int = 1             # pad heads/experts to a multiple of this
+    param_dtype: str = "float32"
+
+    # ---- derived ----
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def n_heads_padded(self) -> int:
+        if self.n_heads == 0:
+            return 0
+        return -(-self.n_heads // self.tp_pad) * self.tp_pad
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up for TP sharding; padded logits are masked to
+        -inf so semantics match the logical vocab exactly."""
+        return -(-self.vocab // self.tp_pad) * self.tp_pad
+
+    @property
+    def head_map(self) -> Tuple[int, ...]:
+        return head_to_kv_map(self.n_heads, self.n_kv, self.n_heads_padded)
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def windows(self) -> Tuple[int, ...]:
+        L = self.n_layers
+        if self.window_pattern == "global":
+            return (0,) * L
+        if self.window_pattern == "gemma_alt":  # local on even layers
+            return tuple(self.window_size if i % 2 == 0 else 0
+                         for i in range(L))
+        if self.window_pattern == "hymba":  # global at first/middle/last
+            g = {0, L // 2, L - 1}
+            return tuple(0 if i in g else self.window_size for i in range(L))
+        raise ValueError(self.window_pattern)
+
+    def with_tp(self, tp: int) -> "ModelConfig":
+        """Return a copy padded for a TP degree (heads + experts)."""
+        moe = self.moe
+        if moe is not None:
+            epad = -(-moe.n_experts // tp) * tp
+            moe = dataclasses.replace(moe, n_experts_padded=epad)
+        return dataclasses.replace(self, tp_pad=tp, moe=moe)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ---- parameter counting (logical, for MODEL_FLOPS) ----
+    def param_count(self, padded: bool = False) -> int:
+        nh = self.n_heads_padded if padded else self.n_heads
+        hd = self.head_dim_
+        d = self.d_model
+        vv = self.vocab_padded if padded else self.vocab
+        n = vv * d  # embed
+        if not self.tie_embeddings:
+            n += d * vv
+        per_layer = 0
+        if self.mixer in ("attn", "hybrid"):
+            if self.mla is not None:
+                m = self.mla
+                per_layer += (d * m.q_lora + m.q_lora * nh * (m.qk_nope + m.qk_rope)
+                              + d * m.kv_lora + m.kv_lora * nh * m.qk_nope
+                              + m.kv_lora * nh * m.v_dim + d * m.qk_rope
+                              + nh * m.v_dim * d)
+            else:
+                per_layer += d * nh * hd + 2 * d * self.n_kv * hd + nh * hd * d
+        if self.mixer in ("mamba", "hybrid"):
+            mc = self.mamba
+            di = mc.d_inner(d)
+            gn = mc.n_groups * mc.d_state
+            per_layer += 2 * d * di + 2 * d * gn + d * mc.n_heads(d) + di * d
+        if self.moe is not None:
+            e = self.moe.e_pad if padded else self.moe.n_experts
+            per_layer += d * e + e * 3 * d * self.moe.d_expert
+        elif self.d_ff > 0:
+            per_layer += 3 * d * self.d_ff
+        return n + self.n_layers * per_layer
+
+    def active_param_count(self) -> int:
+        """Per-token active parameters (MoE: top_k experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        full = self.param_count()
+        all_experts = self.n_layers * self.moe.n_experts * 3 * self.d_model \
+            * self.moe.d_expert
+        active = self.n_layers * self.moe.top_k * 3 * self.d_model \
+            * self.moe.d_expert
+        return full - all_experts + active
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: ModelConfig, key) -> Dict:
+    ks = jax.random.split(key, 8)
+    dt = cfg.dtype
+    d = cfg.d_model
+    lp: Dict[str, Any] = {"ln1": jnp.zeros((d,), dt) if cfg.zero_centered_norm
+                          else jnp.ones((d,), dt)}
+    if cfg.mixer in ("attn", "hybrid"):
+        if cfg.mla is not None:
+            m = cfg.mla
+            lp["attn"] = init_mla(
+                ks[0], d_model=d, n_heads_padded=cfg.n_heads_padded,
+                n_heads=cfg.n_heads, q_lora=m.q_lora, kv_lora=m.kv_lora,
+                qk_nope=m.qk_nope, qk_rope=m.qk_rope, v_dim=m.v_dim, dtype=dt)
+        else:
+            lp["attn"] = init_attention(
+                ks[0], d_model=d, n_heads=cfg.n_heads,
+                n_heads_padded=cfg.n_heads_padded, n_kv=cfg.n_kv,
+                head_dim=cfg.head_dim_, qkv_bias=cfg.qkv_bias, dtype=dt)
+    if cfg.mixer in ("mamba", "hybrid"):
+        lp["mamba"] = init_mamba(ks[1], d_model=d, mc=cfg.mamba, dtype=dt)
+    if cfg.mixer == "hybrid":
+        lp["norm_attn"] = jnp.ones((d,), dt)
+        lp["norm_mamba"] = jnp.ones((d,), dt)
+    if cfg.post_norm:
+        lp["ln1_post"] = jnp.zeros((d,), dt) if cfg.zero_centered_norm \
+            else jnp.ones((d,), dt)
+    if cfg.moe is not None or cfg.d_ff > 0:
+        lp["ln2"] = jnp.zeros((d,), dt) if cfg.zero_centered_norm \
+            else jnp.ones((d,), dt)
+        if cfg.moe is not None:
+            lp["moe"] = init_moe(ks[2], d_model=d, mo=cfg.moe, dtype=dt)
+        else:
+            lp["mlp"] = {
+                "w_gate": _dense(ks[3], d, cfg.d_ff, dt),
+                "w_up": _dense(ks[4], d, cfg.d_ff, dt),
+                "w_down": _dense(ks[5], cfg.d_ff, d, dt),
+            }
+        if cfg.post_norm:
+            lp["ln2_post"] = jnp.zeros((d,), dt) if cfg.zero_centered_norm \
+                else jnp.ones((d,), dt)
+    return lp
+
+
+def _dense(key, i, o, dt):
+    from .layers import dense_init
+    return dense_init(key, i, (o,), dt)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    k_emb, k_head, k_layers = jax.random.split(key, 3)
+    dt = cfg.dtype
+    params: Dict[str, Any] = {
+        "embed": embed_init(k_emb, cfg.vocab_padded, cfg.d_model, dt),
+        "final_norm": (jnp.zeros((cfg.d_model,), dt)
+                       if cfg.zero_centered_norm
+                       else jnp.ones((cfg.d_model,), dt)),
+    }
+    if cfg.vocab_padded > cfg.vocab:  # padded rows are never valid tokens
+        params["embed"] = params["embed"].at[cfg.vocab:].set(0.0)
+    if not cfg.tie_embeddings:
+        params["head"] = _dense(k_head, cfg.d_model, cfg.vocab_padded, dt)
+        if cfg.vocab_padded > cfg.vocab:
+            params["head"] = params["head"].at[:, cfg.vocab:].set(0.0)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = [_init_layer(cfg, k) for k in layer_keys]
+    params["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return params
+
+
+def param_shapes(cfg: ModelConfig):
+    """Abstract parameter tree (no allocation) — used by the dry-run."""
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Sharding specs (model/TP axis only; DP handled by the caller)
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig, axis: str = MODEL_AXIS) -> Dict:
+    """PartitionSpec tree matching init_params' structure."""
+    A = axis
+
+    def attn_specs():
+        if cfg.mla is not None:
+            return {
+                "w_dq": P(None, None, None), "norm_q": P(None, None),
+                "w_uq": P(None, None, A, None),
+                "w_dkv": P(None, None, None), "norm_kv": P(None, None),
+                "w_uk": P(None, None, A, None),
+                "w_uv": P(None, None, A, None),
+                "w_kr": P(None, None, None),
+                "wo": P(None, A, None, None),
+            }
+        s = {
+            "wq": P(None, None, A, None),
+            "wk": P(None, None, None, None),
+            "wv": P(None, None, None, None),
+            "wo": P(None, A, None, None),
+        }
+        if cfg.qkv_bias:
+            s.update({"bq": P(None, A, None), "bk": P(None, None, None),
+                      "bv": P(None, None, None)})
+        return s
+
+    def mamba_specs():
+        return {
+            "w_z": P(None, None, A), "w_x": P(None, None, A),
+            "w_B": P(None, None, None), "w_C": P(None, None, None),
+            "w_dt": P(None, None, None),
+            "conv_x": P(None, None, A), "conv_B": P(None, None, None),
+            "conv_C": P(None, None, None),
+            "conv_bx": P(None, A), "conv_bB": P(None, None),
+            "conv_bC": P(None, None),
+            "A_log": P(None, None), "D": P(None, None),
+            "dt_bias": P(None, None),
+            "norm": P(None, A), "out_proj": P(None, A, None),
+        }
+
+    lp: Dict[str, Any] = {"ln1": P(None, None)}
+    if cfg.mixer in ("attn", "hybrid"):
+        lp["attn"] = attn_specs()
+    if cfg.mixer in ("mamba", "hybrid"):
+        lp["mamba"] = mamba_specs()
+    if cfg.mixer == "hybrid":
+        lp["norm_attn"] = P(None, None)
+        lp["norm_mamba"] = P(None, None)
+    if cfg.post_norm:
+        lp["ln1_post"] = P(None, None)
+    if cfg.moe is not None or cfg.d_ff > 0:
+        lp["ln2"] = P(None, None)
+        if cfg.moe is not None:
+            lp["moe"] = {
+                "router": P(None, None, None),
+                "w_gate": P(None, A, None, None),
+                "w_up": P(None, A, None, None),
+                "w_down": P(None, A, None, None),
+            }
+        else:
+            lp["mlp"] = {"w_gate": P(None, None, A), "w_up": P(None, None, A),
+                         "w_down": P(None, A, None)}
+        if cfg.post_norm:
+            lp["ln2_post"] = P(None, None)
+
+    specs: Dict[str, Any] = {
+        "embed": P(A, None),
+        "final_norm": P(None),
+        "layers": lp,
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = P(None, A)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> Dict:
+    """Stacked (L-leading) decode cache for the configured mixer."""
+    dt = dtype or cfg.dtype
+    L = cfg.n_layers
+    c: Dict[str, jax.Array] = {}
+    if cfg.mixer in ("attn", "hybrid"):
+        if cfg.mla is not None:
+            c["ckv"] = jnp.zeros((L, batch, max_len, cfg.mla.kv_lora), dt)
+            c["kr"] = jnp.zeros((L, batch, max_len, cfg.mla.qk_rope), dt)
+        else:
+            c["k"] = jnp.zeros((L, batch, max_len, cfg.n_kv, cfg.head_dim_), dt)
+            c["v"] = jnp.zeros((L, batch, max_len, cfg.n_kv, cfg.head_dim_), dt)
+    if cfg.mixer in ("mamba", "hybrid"):
+        one = init_mamba_cache(batch, cfg.d_model, cfg.mamba, dt)
+        for k, v in one.items():
+            c[k] = jnp.broadcast_to(v[None], (L, *v.shape)).copy()
+    return c
+
+
+def cache_specs(cfg: ModelConfig, axis: str = MODEL_AXIS,
+                data_axis=None, seq_axis=None) -> Dict:
+    """Sharding specs for the cache: batch->data, seq->seq_axis."""
+    c: Dict[str, Any] = {}
+    if cfg.mixer in ("attn", "hybrid"):
+        if cfg.mla is not None:
+            c["ckv"] = P(None, data_axis, seq_axis, None)
+            c["kr"] = P(None, data_axis, seq_axis, None)
+        else:
+            c["k"] = P(None, data_axis, seq_axis, None, None)
+            c["v"] = P(None, data_axis, seq_axis, None, None)
+    if cfg.mixer in ("mamba", "hybrid"):
+        c["state"] = P(None, data_axis, axis, None, None)
+        c["conv_x"] = P(None, data_axis, None, axis)
+        c["conv_B"] = P(None, data_axis, None, None)
+        c["conv_C"] = P(None, data_axis, None, None)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss / decode
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg: ModelConfig, params: Dict, batch: Dict) -> jax.Array:
+    if cfg.frontend == "audio_stub":
+        # musicgen: the EnCodec frontend is a stub; precomputed frame
+        # embeddings come straight in (input_specs provides them).
+        return batch["embeds"].astype(cfg.dtype)
+    h = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.emb_scale:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    if cfg.frontend == "vision_stub" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(h.dtype)
+        h = jax.lax.dynamic_update_slice(h, pe, (0, 0, 0))
+    return h
+
+
+def _positions(cfg: ModelConfig, batch: Dict, b: int, s: int,
+               cache_pos) -> jax.Array:
+    if "positions" in batch:
+        return batch["positions"]
+    if cache_pos is not None and s == 1:  # decode
+        pos = jnp.full((b, 1), cache_pos, jnp.int32)
+        if cfg.mrope_sections is not None:
+            pos = jnp.broadcast_to(pos[None], (3, b, 1))
+        return pos
+    pos = jnp.arange(s, dtype=jnp.int32)
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[None, None, :], (3, b, s))
+    return pos
+
+
+def forward(cfg: ModelConfig, params: Dict, batch: Dict, *,
+            cache: Optional[Dict] = None, cache_pos=None,
+            remat: bool = False, seq_shard: Callable = lambda x: x,
+            e_shard: Callable = lambda x: x,
+            param_hook: Callable = lambda lp: lp,
+            decode_attn=None,
+            ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Run the decoder stack.
+
+    ``param_hook`` wraps each layer's parameter slice inside the scan body —
+    the attach point for the early-bird gradient-sync engine.
+    Returns (hidden (B,S,D), new stacked cache or None).
+    """
+    h = _embed_inputs(cfg, params, batch)
+    b, s = h.shape[0], h.shape[1]
+    positions = _positions(cfg, batch, b, s, cache_pos)
+    windows = jnp.asarray(cfg.windows(), jnp.int32)
+
+    def body(carry, xs):
+        lp, window, layer_cache = xs
+        lp = param_hook(lp)
+        h_new, c_new = block_fwd(cfg, lp, carry, positions=positions,
+                                 window=window, cache=layer_cache,
+                                 cache_pos=cache_pos, seq_shard=seq_shard,
+                                 e_shard=e_shard, decode_attn=decode_attn)
+        return h_new, c_new
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    xs = (params["layers"], windows, cache)
+    h, new_cache = jax.lax.scan(body, h, xs)
+    h = rms_norm(h, params["final_norm"],
+                 zero_centered=cfg.zero_centered_norm)
+    return h, new_cache
+
+
+def output_head(cfg: ModelConfig, params: Dict) -> jax.Array:
+    return (params["embed"].T if cfg.tie_embeddings else params["head"])
+
+
+def _final_logits(cfg: ModelConfig, h_last: jax.Array,
+                  params: Dict) -> jax.Array:
+    """Last-position logits with softcap + TP-padding mask applied."""
+    logits = h_last @ output_head(cfg, params)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    if cfg.vocab_padded > cfg.vocab:
+        pad = jax.lax.broadcasted_iota(jnp.int32, (1, cfg.vocab_padded), 1)
+        logits = jnp.where(pad < cfg.vocab, logits, -jnp.inf)
+    return logits
+
+
+def loss_fn(cfg: ModelConfig, params: Dict, batch: Dict, *,
+            remat: bool = True, seq_shard: Callable = lambda x: x,
+            e_shard: Callable = lambda x: x,
+            param_hook: Callable = lambda lp: lp,
+            gather_targets: bool = False) -> jax.Array:
+    """Next-token cross entropy (labels = batch['labels'])."""
+    h, _ = forward(cfg, params, batch, remat=remat, seq_shard=seq_shard,
+                   e_shard=e_shard, param_hook=param_hook)
+    return chunked_cross_entropy(
+        h, output_head(cfg, params), batch["labels"],
+        chunk=cfg.loss_chunk, final_softcap=cfg.final_softcap,
+        mask=batch.get("loss_mask"),
+        valid_vocab=(cfg.vocab if cfg.vocab_padded > cfg.vocab else None),
+        gather_targets=gather_targets)
+
+
+def prefill(cfg: ModelConfig, params: Dict, batch: Dict, *,
+            cache: Optional[Dict] = None,
+            seq_shard: Callable = lambda x: x,
+            e_shard: Callable = lambda x: x) -> Tuple[jax.Array, Dict]:
+    """Forward pass that fills a KV cache; returns last-token logits."""
+    tokens_like = batch.get("tokens", batch.get("embeds"))
+    b, s = tokens_like.shape[0], tokens_like.shape[1]
+    if cache is None:
+        cache = init_cache(cfg, b, s)
+    h, new_cache = forward(cfg, params, batch, cache=cache,
+                           cache_pos=jnp.int32(0), seq_shard=seq_shard,
+                           e_shard=e_shard)
+    return _final_logits(cfg, h[:, -1, :], params), new_cache
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache: Dict,
+                tokens: jax.Array, pos, *,
+                embeds: Optional[jax.Array] = None,
+                seq_shard: Callable = lambda x: x,
+                e_shard: Callable = lambda x: x,
+                decode_attn=None) -> Tuple[jax.Array, Dict]:
+    """One decode step: tokens (B,) int32, pos scalar write offset.
+
+    Returns (logits (B, V) f32, updated cache).
+    """
+    batch: Dict[str, Any] = {}
+    if cfg.frontend == "audio_stub" and embeds is not None:
+        batch["embeds"] = embeds
+    else:
+        batch["tokens"] = tokens[:, None]
+    h, new_cache = forward(cfg, params, batch, cache=cache, cache_pos=pos,
+                           seq_shard=seq_shard, e_shard=e_shard,
+                           decode_attn=decode_attn)
+    return _final_logits(cfg, h[:, -1, :], params), new_cache

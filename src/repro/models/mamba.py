@@ -1,0 +1,242 @@
+"""Mamba-2 (SSD — state-space duality) mixer, pure JAX.
+
+Chunked SSD algorithm per the Mamba-2 paper (arXiv:2405.21060): the
+sequence is split into chunks; intra-chunk terms are computed as masked
+matmuls (MXU-friendly on TPU — this is the hardware adaptation of SSD) and
+inter-chunk terms via a short scan over chunk states.  The decode path
+carries a constant-size recurrent state — the reason SSM/hybrid archs are
+the ones that run the ``long_500k`` shape.
+
+Projections are stored *split* (z / x / B / C / dt) rather than as one
+fused in_proj so that tensor-parallel sharding never cuts across segment
+boundaries: w_z, w_x, conv_x, norm and out_proj shard the inner dimension
+over the 'model' axis; the small B/C/dt paths stay replicated.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rms_norm, silu
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    n_groups: int = 1
+    d_conv: int = 4
+    expand: int = 2
+    chunk: int = 256
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        di = self.d_inner(d_model)
+        assert di % self.head_dim == 0, (di, self.head_dim)
+        return di // self.head_dim
+
+
+def init_mamba(key, *, d_model: int, mc: MambaConfig, dtype) -> Dict:
+    di = mc.d_inner(d_model)
+    nh = mc.n_heads(d_model)
+    gn = mc.n_groups * mc.d_state
+    ks = jax.random.split(key, 8)
+    return {
+        "w_z": dense_init(ks[0], d_model, (di,), dtype),
+        "w_x": dense_init(ks[1], d_model, (di,), dtype),
+        "w_B": dense_init(ks[2], d_model, (gn,), dtype),
+        "w_C": dense_init(ks[3], d_model, (gn,), dtype),
+        "w_dt": dense_init(ks[4], d_model, (nh,), dtype),
+        "conv_x": (0.1 * jax.random.normal(ks[5], (mc.d_conv, di),
+                                           jnp.float32)).astype(dtype),
+        "conv_B": (0.1 * jax.random.normal(ks[6], (mc.d_conv, gn),
+                                           jnp.float32)).astype(dtype),
+        "conv_C": (0.1 * jax.random.normal(ks[7], (mc.d_conv, gn),
+                                           jnp.float32)).astype(dtype),
+        "conv_bx": jnp.zeros((di,), dtype),
+        "conv_bB": jnp.zeros((gn,), dtype),
+        "conv_bC": jnp.zeros((gn,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[4], di, (d_model,), dtype),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """(…, T) -> (…, T, T): seg[i, j] = sum_{k=j+1..i} x_k, -inf above diag."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq: u (B, S, C), w (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :] * w[i] for i in range(k))
+    return silu(out + b)
+
+
+def _conv_step(u_t: jax.Array, conv_state: jax.Array, w: jax.Array,
+               b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single-token causal conv: u_t (B, 1, C), conv_state (B, K-1, C)."""
+    full = jnp.concatenate([conv_state, u_t], axis=1)  # (B, K, C)
+    out = silu(jnp.einsum("bkc,kc->bc", full, w) + b)
+    return out, full[:, 1:, :]
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, D: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: (b, l, h, p); dt: (b, l, h) (post-softplus, >0);
+    A: (h,) negative; B, C: (b, l, g, n) with g | h; D: (h,).
+    Returns (y (b,l,h,p), final_state (b,h,p,n)).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    chunk = min(chunk, l)
+    pad = (-l) % chunk
+    if pad:
+        # zero-pad the tail: dt=0 rows have decay exp(0)=1 and contribute
+        # x*dt=0, so states and outputs are exact.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        l_orig, l = l, l + pad
+    c = l // chunk
+    rep = h // g
+
+    dA = dt * A  # (b, l, h), negative
+    xdt = x * dt[..., None]
+
+    dA_c = dA.reshape(b, c, chunk, h).transpose(0, 1, 3, 2)      # (b,c,h,Q)
+    x_c = xdt.reshape(b, c, chunk, h, p)                          # (b,c,Q,h,p)
+    B_c = jnp.repeat(B.reshape(b, c, chunk, g, n), rep, axis=3)   # (b,c,Q,h,n)
+    C_c = jnp.repeat(C.reshape(b, c, chunk, g, n), rep, axis=3)
+
+    # Intra-chunk (quadratic in Q, MXU-friendly)
+    L = jnp.exp(_segsum(dA_c))                                    # (b,c,h,Q,Q)
+    scores = jnp.einsum("bcqhn,bcshn->bchqs", C_c, B_c)
+    y_diag = jnp.einsum("bchqs,bchqs,bcshp->bcqhp", scores, L, x_c)
+
+    # Chunk-final state contributions
+    dA_cum = jnp.cumsum(dA_c, axis=-1)                            # (b,c,h,Q)
+    decay_states = jnp.exp(dA_cum[..., -1:] - dA_cum)
+    states = jnp.einsum("bcshn,bchs,bcshp->bchpn", B_c, decay_states, x_c)
+
+    # Inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cum[..., -1])                        # (b,c,h)
+
+    def body(s, inputs):
+        st, dec = inputs
+        return s * dec[..., None, None] + st, s  # emit entering state
+
+    s0 = (jnp.zeros((b, h, p, n), x.dtype) if init_state is None
+          else init_state)
+    final, prev_states = jax.lax.scan(
+        body, s0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)            # (b,c,h,p,n)
+
+    y_off = jnp.einsum("bcqhn,bchpn,bchq->bcqhp", C_c, prev_states,
+                       jnp.exp(dA_cum))
+    y = (y_diag + y_off).reshape(b, l, h, p) + x * D[None, None, :, None]
+    if pad:
+        y = y[:, :l_orig]
+    return y, final
+
+
+def mamba_fwd(p: Dict, x: jax.Array, *, mc: MambaConfig, d_model: int,
+              cache: Optional[Dict] = None
+              ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Mamba-2 block forward.
+
+    Train/prefill: x (B, S, D), cache None -> (out, None).
+    Decode: x (B, 1, D), cache {'state': (B,H,P,N), 'conv_x': (B,K-1,di),
+    'conv_B'/'conv_C': (B,K-1,gn)} -> (out, new cache).
+    """
+    di = mc.d_inner(d_model)
+    nh = mc.n_heads(d_model)
+    b = x.shape[0]
+    z = x @ p["w_z"]
+    xr = x @ p["w_x"]
+    Br = x @ p["w_B"]
+    Cr = x @ p["w_C"]
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if cache is None or x.shape[1] > 1:
+        # Full-sequence path (train, or prefill seeding a fresh cache).
+        # Prefill assumes zero initial conv/SSM state, so the plain causal
+        # conv is exact; the final state + conv tail are emitted as cache.
+        xs = _causal_conv(xr, p["conv_x"], p["conv_bx"])
+        Bm = _causal_conv(Br, p["conv_B"], p["conv_bB"])
+        Cm = _causal_conv(Cr, p["conv_C"], p["conv_bC"])
+        s = x.shape[1]
+        xh = xs.reshape(b, s, nh, mc.head_dim)
+        y, final = ssd_chunked(
+            xh.astype(jnp.float32), dt, A,
+            Bm.reshape(b, s, mc.n_groups, mc.d_state).astype(jnp.float32),
+            Cm.reshape(b, s, mc.n_groups, mc.d_state).astype(jnp.float32),
+            p["D"], mc.chunk,
+            init_state=(None if cache is None else
+                        cache["state"].astype(jnp.float32)))
+        y = y.reshape(b, s, di).astype(x.dtype)
+        if cache is None:
+            new_cache = None
+        else:
+            kk = mc.d_conv - 1
+
+            def tail(u):  # last K-1 pre-activation inputs
+                pad = jnp.pad(u, ((0, 0), (kk, 0), (0, 0)))
+                return pad[:, -kk:, :]
+
+            new_cache = {"state": final.astype(cache["state"].dtype),
+                         "conv_x": tail(xr), "conv_B": tail(Br),
+                         "conv_C": tail(Cr)}
+    else:
+        xs, conv_x = _conv_step(xr, cache["conv_x"], p["conv_x"], p["conv_bx"])
+        Bm, conv_B = _conv_step(Br, cache["conv_B"], p["conv_B"], p["conv_bB"])
+        Cm, conv_C = _conv_step(Cr, cache["conv_C"], p["conv_C"], p["conv_bC"])
+        rep = nh // mc.n_groups
+        Bh = jnp.repeat(Bm.reshape(b, mc.n_groups, mc.d_state), rep,
+                        axis=1).astype(jnp.float32)                 # (B,H,N)
+        Ch = jnp.repeat(Cm.reshape(b, mc.n_groups, mc.d_state), rep,
+                        axis=1).astype(jnp.float32)
+        xh = xs.reshape(b, nh, mc.head_dim).astype(jnp.float32)     # (B,H,P)
+        dt1 = dt[:, 0]                                              # (B,H)
+        dA = jnp.exp(dt1 * A)
+        upd = jnp.einsum("bhp,bhn->bhpn", xh * dt1[..., None], Bh)
+        state = cache["state"].astype(jnp.float32) * dA[..., None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ch) + xh * p["D"][None, :, None]
+        y = y.reshape(b, 1, di).astype(x.dtype)
+        new_cache = {"state": state.astype(cache["state"].dtype),
+                     "conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C}
+
+    y = rms_norm(y * silu(z), p["norm"])
+    return y @ p["out_proj"], new_cache
+
+
+def init_mamba_cache(batch: int, d_model: int, mc: MambaConfig, dtype):
+    nh = mc.n_heads(d_model)
+    gn = mc.n_groups * mc.d_state
+    return {
+        "state": jnp.zeros((batch, nh, mc.head_dim, mc.d_state), dtype),
+        "conv_x": jnp.zeros((batch, mc.d_conv - 1, mc.d_inner(d_model)), dtype),
+        "conv_B": jnp.zeros((batch, mc.d_conv - 1, gn), dtype),
+        "conv_C": jnp.zeros((batch, mc.d_conv - 1, gn), dtype),
+    }

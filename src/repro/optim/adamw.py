@@ -1,0 +1,100 @@
+"""AdamW with ZeRO-1-style sharded optimizer state.
+
+Moments keep the PARAMETER's shape and sharding, plus an extra
+data-parallel sharding on the first dimension divisible by the DP degree
+(the ZeRO-1 trick, expressed natively for GSPMD).  The whole update is
+then elementwise in the parameter layout — no reshapes across sharding
+boundaries (a flat-moment layout was measured to force full-size f32
+all-gathers of every leaf).  The only DP communication GSPMD inserts is
+the bf16 all-gather of the updated parameters — exactly ZeRO-1's
+parameter gather.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+
+
+def init_opt_state(params, cfg: AdamWConfig) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def zero1_spec(param_spec: P, shape, dp_axes: Tuple[str, ...],
+               dp_total: int) -> P:
+    """Moment spec: the param spec + DP sharding on the first free dim
+    divisible by the DP degree."""
+    entries = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dp_total > 0 and dim % dp_total == 0 and dim > 0:
+            entries[i] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+            break
+    return P(*entries)
+
+
+def opt_state_specs(param_specs, param_shapes, dp_axes=("data",),
+                    dp_total: int = 1):
+    """Sharding specs for init_opt_state's structure (ZeRO-1)."""
+    is_spec = lambda x: x is None or isinstance(x, P)
+    m_specs = jax.tree.map(
+        lambda s, p: zero1_spec(s, p.shape, dp_axes, dp_total),
+        param_specs, param_shapes, is_leaf=is_spec)
+    return {"step": P(), "m": m_specs, "v": m_specs}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(params, grads, state, lr, cfg: AdamWConfig,
+                 ) -> Tuple[Any, Dict[str, Any]]:
+    """One AdamW step.  ``grads`` must already be synchronized (replicated
+    across DP); returns (new_params, new_state)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.clip_norm > 0 else jnp.float32(1.0)
+    c1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1.0 - cfg.b1) * gf
+        v_new = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(gf)
+        u = (m_new / c1) / (jnp.sqrt(v_new / c2) + cfg.eps)
+        p_new = p.astype(jnp.float32) - lr * (u + cfg.weight_decay
+                                              * p.astype(jnp.float32))
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), \
+            v_new.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"step": step, "m": new_m, "v": new_v}

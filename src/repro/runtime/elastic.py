@@ -1,0 +1,70 @@
+"""Elastic scaling: re-plan the mesh for whatever devices survive.
+
+Strategy (standard for TPU/TRN fleets): the model-parallel degree is a
+property of the checkpointed layout and stays fixed; the data-parallel
+degree absorbs node loss/gain.  On a resize event:
+
+  1. `plan_mesh` picks the largest (data, model) grid that fits the
+     surviving device count with the fixed model degree;
+  2. the latest checkpoint is restored with `reshard-on-restore`
+     (ckpt.restore with new shardings);
+  3. the stateless data pipeline re-partitions the same global stream
+     across the new host count;
+  4. the global batch is preserved by raising per-replica batch (or, if
+     configured, reduced proportionally with an LR rescale).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    data: int
+    model: int
+    dropped_devices: int
+    grad_accum_factor: int   # microbatching factor to keep global batch
+
+    @property
+    def n_devices(self) -> int:
+        return self.data * self.model
+
+
+def plan_mesh(n_devices: int, model_parallel: int,
+              target_data: Optional[int] = None) -> ElasticPlan:
+    """Largest (data, model) grid fitting ``n_devices``; model fixed."""
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"cannot keep model parallelism {model_parallel} with only "
+            f"{n_devices} devices — restore from a re-sharded checkpoint "
+            f"with a smaller model degree instead")
+    data = n_devices // model_parallel
+    used = data * model_parallel
+    accum = 1
+    if target_data is not None and data < target_data:
+        # keep the global batch: accumulate gradients over micro-steps
+        accum = -(-target_data // data)
+    return ElasticPlan(data=data, model=model_parallel,
+                       dropped_devices=n_devices - used,
+                       grad_accum_factor=accum)
+
+
+def build_mesh(plan: ElasticPlan, devices=None) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    use = devices[:plan.n_devices]
+    import numpy as np
+    return Mesh(np.asarray(use).reshape(plan.data, plan.model),
+                ("data", "model"))
+
+
+def reshard(tree, specs, mesh: Mesh):
+    """device_put a tree onto a (possibly new) mesh — restore-time path."""
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+    return jax.tree.map(put, tree, specs,
+                        is_leaf=lambda x: x is None or hasattr(x, "shape"))

@@ -1,0 +1,32 @@
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+SCRIPTS = Path(__file__).resolve().parent / "multidev_scripts"
+
+
+def run_multidev(script_name: str, ndev: int = 8, timeout: int = 600,
+                 args=()):
+    """Run a script in a subprocess with N fake host devices.
+
+    Multi-device unit tests must not pollute the main pytest process,
+    which keeps a single CPU device (per the dry-run isolation rule).
+    """
+    env = os.environ.copy()
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+    env["PYTHONPATH"] = f"{REPO / 'src'}{os.pathsep}" + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, str(SCRIPTS / script_name), *args],
+                       capture_output=True, text=True, env=env,
+                       timeout=timeout)
+    assert r.returncode == 0, (
+        f"--- stdout ---\n{r.stdout}\n--- stderr ---\n{r.stderr[-4000:]}")
+    return r.stdout
+
+
+@pytest.fixture(scope="session")
+def multidev():
+    return run_multidev

@@ -1,0 +1,91 @@
+"""Property tests on the core engine's invariants (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bucketing
+from repro.core.flash_decode import flash_decode_ref
+from repro.kernels.flash_attention import flash_attention
+from repro.models.attention import masked_attention
+
+
+class TestBucketingProperties:
+    @given(n=st.integers(1, 20), aggr_kib=st.sampled_from([0, 1, 16, 1024]),
+           seed=st.integers(0, 5))
+    @settings(max_examples=30, deadline=None)
+    def test_bucketed_apply_identity_roundtrip(self, n, aggr_kib, seed):
+        """bucketed_apply with the identity fn is the identity, for any
+        leaf-set and aggregation threshold."""
+        rng = np.random.default_rng(seed)
+        tree = {f"w{i}": jnp.asarray(
+            rng.standard_normal(tuple(rng.integers(1, 24, rng.integers(1, 3))))
+            .astype(np.float32)) for i in range(n)}
+        out = bucketing.bucketed_apply(tree, lambda flat, b: flat,
+                                       aggr_bytes=aggr_kib << 10)
+        for k in tree:
+            np.testing.assert_array_equal(np.asarray(tree[k]),
+                                          np.asarray(out[k]))
+
+    @given(n=st.integers(1, 30), aggr=st.sampled_from([0, 256, 4096, 1 << 20]))
+    @settings(max_examples=40, deadline=None)
+    def test_plan_partitions_leaves_exactly_once(self, n, aggr):
+        leaves = [jnp.zeros((i % 7 + 1, 3)) for i in range(n)]
+        plan = bucketing.make_plan(leaves, aggr)
+        seen = sorted(i for b in plan.buckets for i in b.leaf_ids)
+        assert seen == list(range(n))
+        # buckets respect the threshold unless a single leaf exceeds it
+        for b in plan.buckets:
+            if len(b.leaf_ids) > 1 and aggr > 0:
+                assert b.nbytes <= aggr
+
+    @given(aggr=st.sampled_from([0, 100, 10_000, 1 << 30]))
+    @settings(max_examples=10, deadline=None)
+    def test_more_aggregation_fewer_buckets(self, aggr):
+        leaves = [jnp.zeros((16,)) for _ in range(12)]
+        base = bucketing.make_plan(leaves, 0).n_buckets
+        assert bucketing.make_plan(leaves, aggr).n_buckets <= base
+
+
+class TestAttentionConsistency:
+    """The three attention implementations agree: model path (chunked
+    masked_attention), Pallas kernel, and the decode oracle."""
+
+    @given(seed=st.integers(0, 4), window=st.sampled_from([0, 32]),
+           kv=st.sampled_from([1, 2, 4]))
+    @settings(max_examples=10, deadline=None)
+    def test_model_path_vs_pallas_kernel(self, seed, window, kv):
+        b, h, s, d = 1, 4, 128, 32
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q = jax.random.normal(ks[0], (b, s, h, d))
+        k = jax.random.normal(ks[1], (b, s, kv, d))
+        v = jax.random.normal(ks[2], (b, s, kv, d))
+        model = masked_attention(q, k, v, q_pos=jnp.arange(s),
+                                 k_pos=jnp.arange(s), window=window,
+                                 scale=d ** -0.5, q_chunk=64)
+        kern = flash_attention(q.transpose(0, 2, 1, 3),
+                               k.transpose(0, 2, 1, 3),
+                               v.transpose(0, 2, 1, 3),
+                               causal=True, window=window,
+                               block_q=32, block_k=32, interpret=True)
+        np.testing.assert_allclose(np.asarray(model),
+                                   np.asarray(kern.transpose(0, 2, 1, 3)),
+                                   rtol=2e-5, atol=2e-5)
+
+    @given(seed=st.integers(0, 4), pos=st.sampled_from([0, 17, 63]))
+    @settings(max_examples=10, deadline=None)
+    def test_model_decode_vs_flash_decode_oracle(self, seed, pos):
+        b, h, kv, s, d = 2, 4, 2, 64, 16
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q = jax.random.normal(ks[0], (b, 1, h, d))
+        k = jax.random.normal(ks[1], (b, s, kv, d))
+        v = jax.random.normal(ks[2], (b, s, kv, d))
+        q_pos = jnp.full((b, 1), pos)
+        model = masked_attention(q, k, v, q_pos=q_pos, k_pos=jnp.arange(s),
+                                 scale=d ** -0.5)
+        oracle = flash_decode_ref(q[:, 0], k, v, pos=jnp.int32(pos),
+                                  scale=d ** -0.5)
+        np.testing.assert_allclose(np.asarray(model[:, 0]),
+                                   np.asarray(oracle), rtol=2e-5, atol=2e-5)

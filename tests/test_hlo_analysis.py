@@ -1,0 +1,122 @@
+"""Unit tests for the HLO analyzer that powers the roofline tables."""
+
+import textwrap
+
+import pytest
+
+from repro.launch import hlo_analysis as ha
+
+SIMPLE = textwrap.dedent("""\
+    HloModule jit_step
+
+    %cond.1 (p: (s32[])) -> pred[] {
+      %p = (s32[]) parameter(0)
+      %gte = s32[] get-tuple-element(%p), index=0
+      %c = s32[] constant(7)
+      ROOT %cmp = pred[] compare(%gte, %c), direction=LT
+    }
+
+    %body.1 (p: (s32[], f32[8,16], f32[4,16])) -> (s32[], f32[8,16], f32[4,16]) {
+      %p = (s32[], f32[8,16], f32[4,16]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %w = f32[8,16]{1,0} get-tuple-element(%p), index=1
+      %h = f32[4,16]{1,0} get-tuple-element(%p), index=2
+      %ar = f32[4,16]{1,0} all-reduce(%h), replica_groups={}, to_apply=%add.0
+      %one = s32[] constant(1)
+      %ni = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[8,16], f32[4,16]) tuple(%ni, %w, %ar)
+    }
+
+    ENTRY %main (a: f32[8,16], b: f32[4,16]) -> f32[4,16] {
+      %a = f32[8,16]{1,0} parameter(0)
+      %b = f32[4,16]{1,0} parameter(1)
+      %zero = s32[] constant(0)
+      %init = (s32[], f32[8,16], f32[4,16]) tuple(%zero, %a, %b)
+      %wh = (s32[], f32[8,16], f32[4,16]) while(%init), condition=%cond.1, body=%body.1
+      %d = f32[4,8]{1,0} dot(%b, %a), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+      %ag = f32[16,16]{1,0} all-gather(%b), dimensions={0}
+      ROOT %out = f32[4,16]{1,0} get-tuple-element(%wh), index=2
+    }
+    """)
+
+
+class TestShapeBytes:
+    def test_basic(self):
+        assert ha.shape_bytes("f32[4,16]{1,0}") == 4 * 16 * 4
+        assert ha.shape_bytes("bf16[2,3]") == 12
+        assert ha.shape_bytes("pred[]") == 1
+        assert ha.shape_bytes("(f32[2], s32[4])") == 8 + 16
+
+    def test_unknown_dtype_ignored(self):
+        assert ha.shape_bytes("token[]") == 0
+
+
+class TestAnalyze:
+    def test_collectives_with_loop_multiplier(self):
+        stats = ha.analyze_hlo(SIMPLE)
+        # all-reduce inside the 7-trip while counts 7x; all-gather once
+        assert stats.counts["all-reduce"] == 7
+        assert stats.bytes_["all-reduce"] == 7 * 4 * 16 * 4
+        assert stats.counts["all-gather"] == 1
+        assert stats.bytes_["all-gather"] == 16 * 16 * 4
+
+    def test_dot_flops(self):
+        stats = ha.analyze_hlo(SIMPLE)
+        # dot: output (4,8), contraction 16 -> 2*4*8*16
+        assert stats.dot_flops == pytest.approx(2 * 4 * 8 * 16)
+
+    def test_invariant_detection(self):
+        comps, entry = ha._split_computations(SIMPLE)
+        inv = ha._invariant_names(comps["%body.1"])
+        assert "%w" in inv       # passed through unchanged
+        assert "%h" not in inv   # replaced by the all-reduce result
+
+    def test_multipliers(self):
+        comps, entry = ha._split_computations(SIMPLE)
+        mult, parent = ha._multipliers(comps, entry)
+        assert mult[entry] == 1
+        assert mult["%body.1"] == 7
+        assert parent["%body.1"] == 1
+
+    def test_trip_count(self):
+        comps, _ = ha._split_computations(SIMPLE)
+        assert ha._trip_count(comps["%cond.1"]) == 7
+
+    def test_hbm_bounds_ordering(self):
+        stats = ha.analyze_hlo(SIMPLE)
+        assert 0 < stats.hbm_bytes_min <= stats.hbm_bytes
+
+
+NESTED = SIMPLE.replace(
+    "ENTRY %main", "%outer_body (q: (s32[], f32[4,16])) -> (s32[], f32[4,16]) {\n"
+    "  %q = (s32[], f32[4,16]) parameter(0)\n"
+    "  %j = s32[] get-tuple-element(%q), index=0\n"
+    "  %x = f32[4,16]{1,0} get-tuple-element(%q), index=1\n"
+    "  %ar2 = f32[4,16]{1,0} all-reduce(%x), replica_groups={}, to_apply=%add.0\n"
+    "  %one2 = s32[] constant(1)\n"
+    "  %nj = s32[] add(%j, %one2)\n"
+    "  ROOT %t2 = (s32[], f32[4,16]) tuple(%nj, %ar2)\n"
+    "}\n\n"
+    "%outer_cond (q: (s32[], f32[4,16])) -> pred[] {\n"
+    "  %q = (s32[], f32[4,16]) parameter(0)\n"
+    "  %j = s32[] get-tuple-element(%q), index=0\n"
+    "  %c3 = s32[] constant(3)\n"
+    "  ROOT %cmp2 = pred[] compare(%j, %c3), direction=LT\n"
+    "}\n\n"
+    "ENTRY %main")
+
+
+class TestNested:
+    def test_second_loop_counts(self):
+        txt = NESTED + (
+            "\n%extra (e: f32[4,16]) -> (s32[], f32[4,16]) {\n"
+            "  %e = f32[4,16]{1,0} parameter(0)\n"
+            "  %z2 = s32[] constant(0)\n"
+            "  %i2 = (s32[], f32[4,16]) tuple(%z2, %e)\n"
+            "  ROOT %wh2 = (s32[], f32[4,16]) while(%i2), "
+            "condition=%outer_cond, body=%outer_body\n"
+            "}\n")
+        # %extra is unreachable from ENTRY: its loop body is counted ONCE
+        # (conservative fallback), so 7 (reachable loop) + 1.
+        stats = ha.analyze_hlo(txt)
+        assert stats.counts["all-reduce"] == 7 + 1

@@ -1,0 +1,180 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes and dtypes, plus hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.bucket_pack import bucket_pack, bucket_unpack
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.quant8 import BLOCK, dequantize_blockwise, quantize_blockwise
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (b, h, hkv, sq, sk, d, causal, window, softcap, dtype)
+    (1, 2, 2, 128, 128, 64, True, 0, None, jnp.float32),
+    (2, 4, 2, 128, 128, 64, True, 0, None, jnp.float32),    # GQA 2:1
+    (1, 8, 1, 64, 64, 128, True, 0, None, jnp.float32),     # MQA
+    (1, 2, 2, 256, 256, 64, True, 64, None, jnp.float32),   # sliding window
+    (1, 2, 2, 128, 128, 64, True, 0, 50.0, jnp.float32),    # softcap
+    (1, 2, 2, 128, 128, 64, True, 32, 30.0, jnp.float32),   # both
+    (1, 2, 2, 100, 100, 64, True, 0, None, jnp.float32),    # non-multiple
+    (1, 2, 2, 1, 256, 64, False, 0, None, jnp.float32),     # decode-like
+    (1, 2, 2, 128, 128, 64, True, 0, None, jnp.bfloat16),
+    (1, 4, 4, 128, 128, 256, True, 0, None, jnp.float32),   # gemma head_dim
+]
+
+
+@pytest.mark.parametrize(
+    "b,h,hkv,sq,sk,d,causal,window,softcap,dtype", FLASH_CASES)
+def test_flash_attention_matches_ref(b, h, hkv, sq, sk, d, causal, window,
+                                     softcap, dtype):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = rand(kq, (b, h, sq, d), dtype)
+    k = rand(kk, (b, hkv, sk, d), dtype)
+    v = rand(kv, (b, hkv, sk, d), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, block_q=64, block_k=64,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=softcap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_block_shape_invariance():
+    """Different BlockSpec tilings must not change the numerics."""
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = rand(kq, (1, 2, 256, 64), jnp.float32)
+    k = rand(kk, (1, 2, 256, 64), jnp.float32)
+    v = rand(kv, (1, 2, 256, 64), jnp.float32)
+    outs = [flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+            for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256),
+                           (128, 32)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=2e-5, atol=2e-5)
+
+
+@given(sq=st.sampled_from([32, 96, 128]), sk=st.sampled_from([32, 64, 160]),
+       h=st.sampled_from([1, 2, 4]), window=st.sampled_from([0, 16, 48]),
+       seed=st.integers(0, 3))
+@settings(max_examples=12, deadline=None)
+def test_flash_attention_property(sq, sk, h, window, seed):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = rand(kq, (1, h, sq, 64), jnp.float32)
+    k = rand(kk, (1, h, sk, 64), jnp.float32)
+    v = rand(kv, (1, h, sk, 64), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=32, block_k=32, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# bucket pack / unpack
+# ---------------------------------------------------------------------------
+
+LEAF_SETS = [
+    [(4, 8), (16,), (3, 5, 7)],
+    [(128,)],
+    [(1,), (1,), (1,)],
+    [(256, 128), (64,), (13,)],
+]
+
+
+@pytest.mark.parametrize("shapes", LEAF_SETS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bucket_pack_matches_ref(shapes, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(0), len(shapes))
+    leaves = [rand(k, s, dtype) for k, s in zip(keys, shapes)]
+    got = bucket_pack(leaves, interpret=True)
+    want = ref.bucket_pack_ref(leaves)
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+@pytest.mark.parametrize("shapes", LEAF_SETS)
+def test_bucket_roundtrip(shapes):
+    keys = jax.random.split(jax.random.PRNGKey(1), len(shapes))
+    leaves = [rand(k, s, jnp.float32) for k, s in zip(keys, shapes)]
+    flat = bucket_pack(leaves, interpret=True)
+    back = bucket_unpack(flat, leaves, interpret=True)
+    for a, b in zip(leaves, back):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bucket_pack_cast():
+    leaves = [jnp.arange(8.0), jnp.ones((4, 4))]
+    got = bucket_pack(leaves, out_dtype=jnp.bfloat16, interpret=True)
+    want = ref.bucket_pack_ref(leaves, out_dtype=jnp.bfloat16)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+@given(n_leaves=st.integers(1, 6), seed=st.integers(0, 5))
+@settings(max_examples=12, deadline=None)
+def test_bucket_roundtrip_property(n_leaves, seed):
+    rng = np.random.default_rng(seed)
+    shapes = [tuple(rng.integers(1, 20, size=rng.integers(1, 3)))
+              for _ in range(n_leaves)]
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_leaves)
+    leaves = [rand(k, s, jnp.float32) for k, s in zip(keys, shapes)]
+    flat = bucket_pack(leaves, interpret=True)
+    assert flat.shape[0] == sum(int(np.prod(s)) for s in shapes)
+    back = bucket_unpack(flat, leaves, interpret=True)
+    for a, b in zip(leaves, back):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# quant8
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [BLOCK, 4 * BLOCK, 64 * BLOCK, 200 * BLOCK])
+def test_quant8_matches_ref(n):
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,), jnp.float32)
+    q, s = quantize_blockwise(x, interpret=True)
+    q_ref, s_ref = ref.quantize_blockwise_ref(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=1e-6)
+    got = dequantize_blockwise(q, s, interpret=True)
+    want = ref.dequantize_blockwise_ref(q_ref, s_ref)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@given(seed=st.integers(0, 10), scale=st.sampled_from([1e-6, 1.0, 1e4]))
+@settings(max_examples=15, deadline=None)
+def test_quant8_error_bound_property(seed, scale):
+    """|dequant(quant(x)) - x| <= scale/2 per block, for any magnitude."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4 * BLOCK,)) * scale
+    q, s = quantize_blockwise(x, interpret=True)
+    back = dequantize_blockwise(q, s, interpret=True)
+    per_block_bound = np.repeat(np.asarray(s) * 0.5, BLOCK) + 1e-30
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    assert (err <= per_block_bound * 1.001).all()
+
+
+def test_quant8_bytes_saved():
+    n = 64 * BLOCK
+    x = jnp.ones((n,), jnp.float32)
+    q, s = quantize_blockwise(x, interpret=True)
+    bytes_in = n * 4
+    bytes_out = q.size * 1 + s.size * 4
+    assert bytes_out < bytes_in / 3.9  # ~4.06x reduction

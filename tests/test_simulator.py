@@ -1,0 +1,274 @@
+"""Validate the discrete-event simulator against the paper's measurements.
+
+Headline claims (paper §4 / §5):
+  * Fig 4: improved partitioned path matches Pt2Pt single; old AM path is
+    slower everywhere; RMA pays extra sync at small sizes; all converge to
+    bandwidth at large sizes; protocol jumps at 1-2 KiB and 8-16 KiB.
+  * Fig 5: 32 threads / 1 VCI -> ~30x penalty vs single for part/many.
+  * Fig 6: 32 threads / 32 VCIs -> many ~= single, part ~3-4x; VCI use cuts
+    contention cost by ~10x.
+  * Fig 7: 4 threads, theta=32 -> no-aggregation ~10x single; aggregation
+    brings it to ~3x.
+  * Fig 8: gamma=100 us/MB, 4 threads/partitions -> measured gain ~2.54
+    (theory 2.67), within the latency/contention haircut.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import perfmodel as pm
+from repro.core import simulator as sim
+from repro.core.partition import (PartitionedRequest, agree_message_count,
+                                  aggregate_message_count)
+
+
+def t_us(approach, **kw):
+    return sim.simulate(approach, **kw).time_us
+
+
+class TestPartitionPlan:
+    def test_gcd_agreement(self):
+        assert agree_message_count(8, 8) == 8
+        assert agree_message_count(8, 12) == 4
+        assert agree_message_count(7, 13) == 1
+
+    def test_aggregation_upper_bound(self):
+        # 32 messages of 512B under a 2048B cap -> groups of 4 -> 8 messages
+        assert aggregate_message_count(32, 512, 2048) == 8
+        assert aggregate_message_count(32, 512, 0) == 32      # disabled
+        assert aggregate_message_count(32, 4096, 2048) == 32  # nothing fits
+
+    def test_partition_to_single_message(self):
+        req = PartitionedRequest(8, 8, 512, aggr_bytes=1 << 20)
+        assert req.n_messages == 1
+        assert req.messages[0].nbytes == 8 * 512
+
+    def test_round_robin_channels(self):
+        req = PartitionedRequest(8, 8, 512, n_channels=4)
+        assert [m.channel for m in req.messages] == [0, 1, 2, 3, 0, 1, 2, 3]
+
+    @given(ns=st.integers(1, 64), nr=st.integers(1, 64),
+           aggr=st.sampled_from([0, 512, 2048, 16384]))
+    @settings(max_examples=200, deadline=None)
+    def test_every_partition_in_exactly_one_message(self, ns, nr, aggr):
+        req = PartitionedRequest(ns, nr, 256, aggr_bytes=aggr)
+        seen = [p for m in req.messages for p in m.partitions]
+        assert sorted(seen) == list(range(ns))
+        assert sum(m.nbytes for m in req.messages) == ns * 256
+
+
+class TestFig4SingleThread:
+    """N=1, theta=1, no delay (paper §4.1)."""
+    KW = dict(n_threads=1, theta=1)
+
+    def test_small_message_latency_near_hardware(self):
+        # MeluXina: 1.22 us network latency; simulated single-message time
+        # should be in that ballpark.
+        t = t_us("pt2pt_single", part_bytes=64, **self.KW)
+        assert 0.8 < t < 2.0
+
+    def test_part_matches_single(self):
+        for s in (64, 1024, 65536, 1 << 20):
+            tp = t_us("part", part_bytes=s, **self.KW)
+            ts = t_us("pt2pt_single", part_bytes=s, **self.KW)
+            assert tp == pytest.approx(ts, rel=0.25)
+
+    def test_old_am_path_slower_everywhere(self):
+        for s in (64, 1024, 16384, 1 << 20, 16 << 20):
+            told = t_us("part_old", part_bytes=s, **self.KW)
+            tnew = t_us("part", part_bytes=s, **self.KW)
+            assert told > tnew * 1.05
+
+    def test_rma_sync_overhead_at_small_sizes(self):
+        ts = t_us("pt2pt_single", part_bytes=64, **self.KW)
+        for ap in ("rma_single_passive", "rma_single_active"):
+            assert t_us(ap, part_bytes=64, **self.KW) > 1.5 * ts
+
+    def test_all_converge_at_large_sizes(self):
+        s = 16 << 20
+        ref = t_us("pt2pt_single", part_bytes=s, **self.KW)
+        for ap in ("part", "rma_single_passive", "rma_single_active",
+                   "pt2pt_many"):
+            assert t_us(ap, part_bytes=s, **self.KW) == pytest.approx(ref, rel=0.1)
+
+    def test_protocol_jumps(self):
+        # short -> bcopy between 1 KiB and 2 KiB: bcopy adds a copy cost.
+        t1k = t_us("pt2pt_single", part_bytes=1024, **self.KW)
+        t2k = t_us("pt2pt_single", part_bytes=2048, **self.KW)
+        assert t2k - t1k > 2048 / sim.DEFAULT_NET.beta_copy / 1e-6 * 0.5
+        # bcopy -> rendezvous between 8 KiB and 16 KiB: handshake jump.
+        t8k = t_us("pt2pt_single", part_bytes=8192, **self.KW)
+        t16k = t_us("pt2pt_single", part_bytes=16384, **self.KW)
+        assert t16k > t8k  # rendezvous round-trip more than offsets zcopy
+
+    def test_bandwidth_asymptote(self):
+        s = 64 << 20
+        t = sim.simulate("pt2pt_single", part_bytes=s, **self.KW).time_s
+        assert t == pytest.approx(sim.theoretical_time(s), rel=0.05)
+
+
+class TestFig5Congestion:
+    """32 threads, theta=1, 1 VCI: ~30x penalty (paper §4.2.1 / §5)."""
+    KW = dict(n_threads=32, theta=1, part_bytes=64, n_vcis=1)
+
+    def test_part_penalty_about_30x(self):
+        ratio = t_us("part", **self.KW) / t_us("pt2pt_single", **self.KW)
+        assert 20 < ratio < 45
+
+    def test_many_similar_to_part(self):
+        tp = t_us("part", **self.KW)
+        tm = t_us("pt2pt_many", **self.KW)
+        assert tm == pytest.approx(tp, rel=0.35)
+
+    def test_many_windows_rma_worse_than_single_window(self):
+        t1 = t_us("rma_single_passive", **self.KW)
+        tn = t_us("rma_many_passive", **self.KW)
+        assert tn > t1
+
+
+class TestFig6VCIs:
+    """32 threads, 32 VCIs: many ~= single; part ~3-4x; ~10x reduction."""
+    KW = dict(n_threads=32, theta=1, part_bytes=64, n_vcis=32)
+
+    def test_many_matches_single(self):
+        ratio = t_us("pt2pt_many", **self.KW) / t_us("pt2pt_single", **self.KW)
+        assert ratio < 1.5
+
+    def test_part_penalty_3_to_4x(self):
+        ratio = t_us("part", **self.KW) / t_us("pt2pt_single", **self.KW)
+        assert 1.8 < ratio < 6.0
+
+    def test_vci_cuts_contention_by_about_10x(self):
+        t1 = t_us("part", n_threads=32, theta=1, part_bytes=64, n_vcis=1)
+        t32 = t_us("part", **self.KW)
+        assert 5.0 < t1 / t32 < 25.0
+
+    def test_rma_many_now_beats_rma_single(self):
+        t1 = t_us("rma_single_passive", **self.KW)
+        tn = t_us("rma_many_passive", **self.KW)
+        assert tn < t1
+
+
+class TestFig7Aggregation:
+    """4 threads, theta=32 (paper §4.2.2): ~10x -> ~3x with aggregation."""
+    KW = dict(n_threads=4, theta=32, part_bytes=64, n_vcis=1)
+
+    def test_no_aggregation_penalty_about_10x(self):
+        ratio = t_us("part", **self.KW) / t_us("pt2pt_single", **self.KW)
+        assert 6 < ratio < 16
+
+    def test_aggregation_brings_it_to_about_3x(self):
+        t = t_us("part", aggr_bytes=16384, **self.KW)
+        ratio = t / t_us("pt2pt_single", **self.KW)
+        assert 1.5 < ratio < 4.5
+
+    def test_no_aggr_matches_many(self):
+        tp = t_us("part", **self.KW)
+        tm = t_us("pt2pt_many", **self.KW)
+        assert tm == pytest.approx(tp, rel=0.35)
+
+    def test_aggregation_helps_only_below_crossover(self):
+        """Message aggregation benefits buffers < N_part * aggr_size."""
+        kw = dict(self.KW)
+        small = sim.simulate("part", aggr_bytes=2048, **kw).time_s
+        small_no = sim.simulate("part", **kw).time_s
+        assert small < small_no
+        kw["part_bytes"] = 1 << 20  # 1 MiB partitions: nothing aggregates
+        big = sim.simulate("part", aggr_bytes=2048, **kw)
+        big_no = sim.simulate("part", **kw)
+        assert big.n_messages == big_no.n_messages
+
+
+class TestFig8EarlyBird:
+    """gamma=100 us/MB, 4 threads, 4 partitions (paper §4.3)."""
+
+    def gain(self, s_part, gamma=100.0, approach="part"):
+        ready = sim.delayed_ready(4, 1, s_part, gamma)
+        tp = sim.simulate(approach, n_threads=4, theta=1, part_bytes=s_part,
+                          ready=ready).time_s
+        tb = sim.simulate("pt2pt_single", n_threads=4, theta=1,
+                          part_bytes=s_part, ready=ready).time_s
+        return tb / tp
+
+    def test_measured_gain_near_2_54(self):
+        g = self.gain(4 << 20)
+        assert 2.2 < g < 2.67  # paper: 2.54 measured vs 2.67 theory
+
+    def test_gain_below_theory(self):
+        theory = pm.eta_large(4, 1, 100.0, 25e9)
+        assert self.gain(4 << 20) < theory
+
+    def test_gain_agnostic_to_api(self):
+        """§4.3: the early-bird gain is independent of the MPI approach."""
+        g_part = self.gain(4 << 20)
+        g_many = self.gain(4 << 20, approach="pt2pt_many")
+        assert g_many == pytest.approx(g_part, rel=0.15)
+
+    def test_breakeven_order_100kB(self):
+        """Below ~100 kB partitions pipelining hurts; above, it wins."""
+        assert self.gain(4 << 10) < 1.0
+        assert self.gain(4 << 20) > 2.0
+
+    def test_small_messages_penalty_matches_eq5_shape(self):
+        """For tiny messages, more partitions -> strictly worse (eq 5 trend;
+        the simulator's same-thread burst pipelining softens the 1/(N*theta)
+        slope, as real MPICH does)."""
+        r1 = sim.simulate("part", n_threads=4, theta=1, part_bytes=64)
+        r8 = sim.simulate("part", n_threads=4, theta=8, part_bytes=64)
+        assert r8.time_s > 1.15 * r1.time_s
+        assert r8.n_messages == 8 * r1.n_messages
+
+
+class TestDelayRateEmpirics:
+    """Appendix A: sampled compute times produce a delay ~ gamma_theta * S."""
+
+    @given(theta=st.sampled_from([1, 2, 4, 8]), seed=st.integers(0, 20))
+    @settings(max_examples=30, deadline=None)
+    def test_sampled_delay_matches_gamma(self, theta, seed):
+        wl = pm.FFT
+        s_part = 1 << 20
+        n = 8
+        ready = sim.sampled_ready(wl, n, theta, s_part, seed=seed)
+        d_emp = ready.max() - ready[:, 0].min()
+        d_model = wl.delay_seconds(theta, s_part)
+        # noise is stochastic: accept the right order of magnitude
+        assert d_emp > 0
+        assert 0.2 * d_model < d_emp < 5.0 * d_model + 1e-9
+
+    def test_mean_compute_rate(self):
+        wl = pm.FFT
+        ready = sim.sampled_ready(wl, 8, 8, 1 << 20, seed=3)
+        per_part = np.diff(np.concatenate([np.zeros((8, 1)), ready], axis=1))
+        assert per_part.mean() == pytest.approx(wl.mu_s_per_b * (1 << 20),
+                                                rel=0.05)
+
+
+class TestSimulatorProperties:
+    @given(ap=st.sampled_from(list(sim.APPROACHES)),
+           n=st.sampled_from([1, 2, 4, 8, 32]),
+           theta=st.sampled_from([1, 2, 8]),
+           size=st.sampled_from([64, 4096, 1 << 20]),
+           vcis=st.sampled_from([1, 4, 32]))
+    @settings(max_examples=150, deadline=None)
+    def test_time_positive_and_finite(self, ap, n, theta, size, vcis):
+        r = sim.simulate(ap, n_threads=n, theta=theta, part_bytes=size,
+                         n_vcis=vcis)
+        assert np.isfinite(r.time_s) and r.time_s > 0
+        assert r.tts_s >= r.time_s
+
+    @given(n=st.sampled_from([2, 4, 8]), size=st.sampled_from([64, 1 << 16]))
+    @settings(max_examples=40, deadline=None)
+    def test_more_vcis_never_hurt_part(self, n, size):
+        t1 = t_us("part", n_threads=n, theta=2, part_bytes=size, n_vcis=1)
+        tn = t_us("part", n_threads=n, theta=2, part_bytes=size, n_vcis=n)
+        assert tn <= t1 * 1.05
+
+    @given(size=st.sampled_from([64, 1024, 65536]))
+    @settings(max_examples=20, deadline=None)
+    def test_aggregation_never_increases_message_count(self, size):
+        a = sim.simulate("part", n_threads=4, theta=8, part_bytes=size,
+                         aggr_bytes=0).n_messages
+        b = sim.simulate("part", n_threads=4, theta=8, part_bytes=size,
+                         aggr_bytes=1 << 20).n_messages
+        assert b <= a

@@ -1,0 +1,232 @@
+"""Unit tests for the substrate layers: data, optim, ckpt, runtime."""
+
+import json
+import os
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt import checkpoint as ckpt
+from repro.data.pipeline import DataConfig, SyntheticStream
+from repro.optim import grad_compress as gc
+from repro.optim.adamw import (AdamWConfig, adamw_update, global_norm,
+                               init_opt_state)
+from repro.optim.schedule import warmup_cosine
+from repro.runtime import elastic
+from repro.runtime.fault_tolerance import (LoopReport, StragglerMonitor,
+                                           run_training_loop)
+
+
+class TestData:
+    CFG = DataConfig(vocab=1000, seq_len=64, global_batch=8, seed=7)
+
+    def test_deterministic(self):
+        s = SyntheticStream(self.CFG)
+        a, b = s.batch(3), s.batch(3)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_steps_differ(self):
+        s = SyntheticStream(self.CFG)
+        assert not np.array_equal(s.batch(0)["tokens"], s.batch(1)["tokens"])
+
+    def test_host_partitioning_consistent(self):
+        """2-host shards concatenate to the 1-host global batch — the
+        property elastic re-scaling relies on."""
+        whole = SyntheticStream(self.CFG).batch(5)
+        h0 = SyntheticStream(self.CFG, host_index=0, host_count=2).batch(5)
+        h1 = SyntheticStream(self.CFG, host_index=1, host_count=2).batch(5)
+        np.testing.assert_array_equal(
+            whole["tokens"], np.concatenate([h0["tokens"], h1["tokens"]]))
+
+    def test_labels_are_shifted_tokens(self):
+        b = SyntheticStream(self.CFG).batch(0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_tokens_in_range(self):
+        b = SyntheticStream(self.CFG).batch(0)
+        assert b["tokens"].min() >= 0 and b["tokens"].max() < 1000
+
+    def test_frontend_stubs(self):
+        cfg = DataConfig(vocab=100, seq_len=16, global_batch=4,
+                         frontend="audio_stub", d_model=32)
+        b = SyntheticStream(cfg).batch(0)
+        assert b["embeds"].shape == (4, 16, 32) and "tokens" not in b
+        cfg = DataConfig(vocab=100, seq_len=16, global_batch=4,
+                         frontend="vision_stub", d_model=32, n_patches=8)
+        b = SyntheticStream(cfg).batch(0)
+        assert b["patch_embeds"].shape == (4, 8, 32) and "tokens" in b
+
+
+class TestAdamW:
+    def test_quadratic_converges(self):
+        cfg = AdamWConfig(weight_decay=0.0, clip_norm=0.0)
+        params = {"w": jnp.array([3.0, -2.0, 1.5])}
+        state = init_opt_state(params, cfg)
+        for _ in range(200):
+            grads = jax.tree.map(lambda w: 2 * w, params)  # d/dw w^2
+            params, state = adamw_update(params, grads, state, 0.05, cfg)
+        assert float(jnp.abs(params["w"]).max()) < 0.05
+
+    def test_moments_match_param_shapes(self):
+        cfg = AdamWConfig()
+        params = {"a": jnp.zeros((3, 5)), "b": jnp.zeros((16,))}
+        st_ = init_opt_state(params, cfg)
+        assert st_["m"]["a"].shape == (3, 5)
+        assert st_["v"]["b"].shape == (16,)
+
+    def test_zero1_specs(self):
+        from jax.sharding import PartitionSpec as P
+        from repro.optim.adamw import opt_state_specs, zero1_spec
+        # first free dim divisible by dp gets the dp axes
+        assert zero1_spec(P(None, "model"), (32, 64), ("data",), 8) == \
+            P("data", "model")
+        # dim sharded by model already -> next dim
+        assert zero1_spec(P("model", None), (40, 64), ("pod", "data"), 32) \
+            == P("model", ("pod", "data"))
+        # nothing divisible -> unchanged
+        assert zero1_spec(P(None,), (7,), ("data",), 8) == P(None)
+
+    def test_clipping(self):
+        cfg = AdamWConfig(clip_norm=1.0, weight_decay=0.0)
+        params = {"w": jnp.zeros((4,))}
+        state = init_opt_state(params, cfg)
+        grads = {"w": jnp.full((4,), 100.0)}
+        p1, _ = adamw_update(params, grads, state, 0.1, cfg)
+        # huge grads are clipped -> first-step update magnitude ~ lr
+        assert float(jnp.abs(p1["w"]).max()) < 0.2
+
+    def test_schedule(self):
+        lr0 = float(warmup_cosine(0, peak_lr=1e-3, warmup_steps=10,
+                                  total_steps=100))
+        lr10 = float(warmup_cosine(10, peak_lr=1e-3, warmup_steps=10,
+                                   total_steps=100))
+        lr100 = float(warmup_cosine(100, peak_lr=1e-3, warmup_steps=10,
+                                    total_steps=100))
+        assert lr0 == 0.0 and abs(lr10 - 1e-3) < 1e-9
+        assert lr100 == pytest.approx(1e-4, rel=1e-3)
+
+
+class TestCompression:
+    @given(st.integers(0, 5))
+    @settings(max_examples=10, deadline=None)
+    def test_quantize_error_bounded(self, seed):
+        g = jax.random.normal(jax.random.PRNGKey(seed), (256,))
+        q, s = gc.quantize_leaf(g)
+        err = jnp.abs(gc.dequantize_leaf(q, s) - g).max()
+        assert float(err) <= float(s) * 0.5 + 1e-7
+
+    def test_error_feedback_mean_preserved(self):
+        """Over many steps, EF transmits the full gradient signal."""
+        key = jax.random.PRNGKey(0)
+        g_const = jax.random.normal(key, (64,)) * 1e-3
+        ef = gc.init_error_feedback({"w": g_const})
+        total_sent = jnp.zeros_like(g_const)
+        n = 50
+        for _ in range(n):
+            sent, ef = gc.compress_with_feedback({"w": g_const}, ef)
+            total_sent = total_sent + sent["w"]
+        np.testing.assert_allclose(np.asarray(total_sent / n),
+                                   np.asarray(g_const), atol=2e-5)
+
+
+class TestCheckpoint:
+    def tree(self):
+        return {"params": {"w": jnp.arange(12.0).reshape(3, 4)},
+                "opt": {"step": jnp.int32(5), "m": jnp.ones((7,))}}
+
+    def test_roundtrip(self, tmp_path):
+        t = self.tree()
+        ckpt.save(tmp_path, 5, t)
+        step, got = ckpt.restore(tmp_path, t)
+        assert step == 5
+        np.testing.assert_array_equal(np.asarray(got["params"]["w"]),
+                                      np.asarray(t["params"]["w"]))
+
+    def test_latest_pointer_and_cleanup(self, tmp_path):
+        t = self.tree()
+        for s in (1, 2, 3, 4, 5):
+            ckpt.save(tmp_path, s, t, keep_last=2)
+        assert ckpt.latest_step(tmp_path) == 5
+        dirs = sorted(p.name for p in tmp_path.glob("step_*"))
+        assert dirs == ["step_00000004", "step_00000005"]
+
+    def test_corruption_detected(self, tmp_path):
+        t = self.tree()
+        d = ckpt.save(tmp_path, 1, t)
+        # corrupt one leaf
+        leaf = next(d.glob("leaf_*.npy"))
+        arr = np.load(leaf)
+        arr.flat[0] += 1
+        np.save(leaf, arr)
+        with pytest.raises(IOError, match="checksum"):
+            ckpt.restore(tmp_path, t)
+
+    def test_async_checkpointer(self, tmp_path):
+        t = self.tree()
+        ac = ckpt.AsyncCheckpointer(tmp_path)
+        ac.save_async(7, t)
+        ac.wait()
+        assert ckpt.latest_step(tmp_path) == 7
+
+    def test_restore_missing_raises(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            ckpt.restore(tmp_path, self.tree())
+
+
+class TestRuntime:
+    def test_straggler_monitor(self):
+        m = StragglerMonitor(window=20, threshold=2.0)
+        for i in range(15):
+            m.record(i, 0.1)
+        assert m.record(15, 0.5)       # 5x median -> straggler
+        assert not m.record(16, 0.11)
+        assert m.straggler_steps == [15]
+
+    def test_loop_runs_and_checkpoints(self, tmp_path):
+        state = {"x": jnp.zeros(())}
+
+        def step_fn(st_, batch):
+            return {"x": st_["x"] + batch}, st_["x"]
+
+        ac = ckpt.AsyncCheckpointer(tmp_path)
+        rep = run_training_loop(
+            step_fn=step_fn, state=state, start_step=0, num_steps=7,
+            checkpoint_every=3, checkpointer=ac,
+            get_batch=lambda s: jnp.float32(1.0))
+        assert rep.steps_run == 7 and not rep.preempted
+        assert ckpt.latest_step(tmp_path) == 7  # final save
+        # resume path
+        step, st_ = ckpt.restore(tmp_path, state)
+        assert step == 7 and float(st_["x"]) == 7.0
+
+    def test_loop_saves_on_exception(self, tmp_path):
+        def step_fn(st_, batch):
+            if batch > 2:
+                raise RuntimeError("node failure")
+            return st_, jnp.float32(0.0)
+
+        ac = ckpt.AsyncCheckpointer(tmp_path)
+        with pytest.raises(RuntimeError):
+            run_training_loop(step_fn=step_fn, state={"x": jnp.zeros(())},
+                              start_step=0, num_steps=10, checkpoint_every=0,
+                              checkpointer=ac, get_batch=lambda s: s)
+        assert ckpt.latest_step(tmp_path) is not None  # crash-save happened
+
+    def test_elastic_plan(self):
+        p = elastic.plan_mesh(512, 16)
+        assert (p.data, p.model, p.dropped_devices) == (32, 16, 0)
+        p = elastic.plan_mesh(500, 16, target_data=32)  # lost 12 devices
+        assert p.data == 31 and p.dropped_devices == 4
+        assert p.grad_accum_factor == 2  # keep global batch via accumulation
+        with pytest.raises(ValueError):
+            elastic.plan_mesh(8, 16)
+
+    def test_elastic_build_mesh_single_device(self):
+        p = elastic.plan_mesh(1, 1)
+        mesh = elastic.build_mesh(p)
+        assert mesh.shape == {"data": 1, "model": 1}

@@ -22,6 +22,7 @@ _CHILD = r"""
 import json, os, re, time
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from repro.core.earlybird import SyncConfig, value_and_synced_grad
 from repro.configs import get_smoke_config
 from repro.models import lm
@@ -42,7 +43,7 @@ for mode in ("bulk", "per_leaf", "partitioned"):
         lambda p, bt, param_hook=None: lm.loss_fn(cfg, p, bt,
                                                   param_hook=param_hook),
         sync)
-    step = jax.jit(jax.shard_map(
+    step = jax.jit(shard_map(
         lambda p, bt: vg(p, bt), mesh=mesh,
         in_specs=(P(), {"tokens": P("data", None),
                         "labels": P("data", None)}),

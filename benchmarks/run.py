@@ -1,23 +1,47 @@
-"""Benchmark harness entry point — one module per paper table/figure.
+"""Benchmark harness entry point — one module per paper table/figure,
+plus the post-paper scenario drivers (steady-state, halo exchange).
 
-Prints ``name,us_per_call,derived`` CSV.  Simulator-based figures run in
-milliseconds; jax_earlybird spawns an 8-device subprocess (~1 min);
-roofline_report reads the dry-run artifacts if present.
+Prints ``name,us_per_call,derived`` CSV.  Simulator-based figures and
+scenarios run in milliseconds; jax_earlybird spawns an 8-device
+subprocess (~1 min, skipped with ``--fast``); roofline_report reads the
+dry-run artifacts if present.
+
+``--json [PATH]`` additionally writes the scenario results (steady-state
+sweep + halo sweep) as a JSON document (default: benchmark_results.json).
 """
 
+import json
 import sys
 
 from . import (fig4_latency, fig5_congestion, fig6_vci, fig7_aggregation,
-               fig8_earlybird, jax_earlybird, roofline_report,
-               tableA_delayrate)
+               fig8_earlybird, jax_earlybird, roofline_report, scen_halo,
+               scen_steady, tableA_delayrate)
 from .common import emit
+
+SCENARIOS = (scen_steady, scen_halo)
+
+
+def _json_path(argv) -> str:
+    if "--json" not in argv:
+        return ""
+    i = argv.index("--json")
+    if i + 1 < len(argv) and not argv[i + 1].startswith("-"):
+        return argv[i + 1]
+    return "benchmark_results.json"
 
 
 def main() -> None:
     emit([], header=True)
     for mod in (tableA_delayrate, fig4_latency, fig5_congestion, fig6_vci,
-                fig7_aggregation, fig8_earlybird):
+                fig7_aggregation, fig8_earlybird, *SCENARIOS):
         emit(mod.rows())
+    path = _json_path(sys.argv)
+    if path:
+        doc = {mod.__name__.split(".")[-1]: mod.results()
+               for mod in SCENARIOS}
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"# scenario JSON written to {path}", file=sys.stderr)
     if "--fast" not in sys.argv:
         emit(jax_earlybird.rows())
     emit(roofline_report.rows())

@@ -32,6 +32,7 @@ from repro.configs import get_smoke_config
 from repro.core.earlybird import SyncConfig, value_and_synced_grad
 from repro.launch import hlo_analysis
 from repro.models import lm
+from repro.compat import shard_map
 
 
 def main():
@@ -52,7 +53,7 @@ def main():
             lambda p, bt, param_hook=None: lm.loss_fn(cfg, p, bt,
                                                       param_hook=param_hook),
             sync)
-        step = jax.jit(jax.shard_map(
+        step = jax.jit(shard_map(
             lambda p, bt: vg(p, bt), mesh=mesh,
             in_specs=(P(), {"tokens": P("data", None),
                             "labels": P("data", None)}),

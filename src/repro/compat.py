@@ -1,0 +1,49 @@
+"""Version-compatibility shims.
+
+``shard_map`` became ``jax.shard_map`` (with ``check_vma``/``axis_names``)
+in newer JAX; older releases ship it as
+``jax.experimental.shard_map.shard_map`` with ``check_rep`` and an ``auto``
+set (the complement of the manual axes).  Everything in this repo imports
+it from here so both spellings work.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` where available, else the classic psum-of-1
+    (constant-folded to a static int inside shard_map)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def set_mesh(mesh):
+    """Ambient-mesh context: ``jax.set_mesh`` / ``use_mesh`` where
+    available; older jax uses the Mesh object itself as the context."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh
+
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False,
+                  axis_names=None):
+        kw = {} if axis_names is None else {"axis_names": axis_names}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma, **kw)
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False,
+                  axis_names=None):
+        auto = frozenset()
+        if axis_names is not None:
+            auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=bool(check_vma),
+                          auto=auto)

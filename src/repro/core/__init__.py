@@ -1,16 +1,19 @@
 """Core: the paper's contribution (partitioned communication) for JAX/TPU.
 
   perfmodel            — closed-form gain/delay-rate model (paper §2.2, App A)
-  simulator            — discrete-event reproduction of the paper's benchmark
-  partition            — partition plans: gcd agreement, aggregation, channels
+  simulator            — schedule registry + multi-rank fabric + scenarios
+  commplan             — THE plan layer: gcd agreement, aggregation, channels
+  partition            — MPI-flavoured persistent-request view of commplan
   bucketing            — gradient-leaf aggregation (MPIR_CVAR_PART_AGGR_SIZE)
   earlybird            — per-layer in-backward bucketed gradient sync
   chunked_collectives  — multi-channel ring collectives + collective matmul
   flash_decode         — partitioned-KV decode attention with LSE combine
 """
 
-from . import perfmodel, simulator  # noqa: F401
+from . import commplan, perfmodel, simulator  # noqa: F401
 from .bucketing import Bucket, BucketPlan, bucketed_apply, make_plan  # noqa: F401
+from .commplan import (CommPlan, WireMessage, channel_slices,  # noqa: F401
+                       channel_streams, plan_sized, plan_uniform)
 from .earlybird import (SyncConfig, finalize_grads, make_layer_hook,  # noqa: F401
                         value_and_synced_grad)
 from .partition import (PartitionedRequest, agree_message_count,  # noqa: F401

@@ -7,6 +7,10 @@ the threshold forms its own bucket, it is never split).  One collective is
 issued per bucket instead of per leaf, trading per-collective latency
 against overlap granularity — exactly the small-message trade-off of the
 paper's eq (5) vs eq (4).
+
+Aggregation and channel assignment are delegated to
+:func:`repro.core.commplan.plan_sized`; this module only adds the
+leaf-element bookkeeping and the pack/unpack/apply machinery.
 """
 
 from __future__ import annotations
@@ -17,6 +21,8 @@ from typing import Any, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from . import commplan
 
 
 @dataclass(frozen=True)
@@ -43,31 +49,20 @@ class BucketPlan:
 
 def make_plan(leaves: Sequence[Any], aggr_bytes: int,
               n_channels: int = 1) -> BucketPlan:
-    """Greedy aggregation of leaves (shape/dtype carriers) into buckets."""
-    buckets: List[Bucket] = []
-    cur_ids: List[int] = []
-    cur_sizes: List[int] = []
-    cur_bytes = 0
-
-    def flush():
-        nonlocal cur_ids, cur_sizes, cur_bytes
-        if cur_ids:
-            buckets.append(Bucket(tuple(cur_ids), tuple(cur_sizes), cur_bytes,
-                                  channel=len(buckets) % max(1, n_channels)))
-            cur_ids, cur_sizes, cur_bytes = [], [], 0
-
-    for i, leaf in enumerate(leaves):
-        n = int(np.prod(leaf.shape)) if leaf.shape else 1
-        b = n * jnp.dtype(leaf.dtype).itemsize
-        if aggr_bytes > 0 and cur_bytes + b > aggr_bytes and cur_ids:
-            flush()
-        cur_ids.append(i)
-        cur_sizes.append(n)
-        cur_bytes += b
-        if aggr_bytes <= 0:  # aggregation disabled: one bucket per leaf
-            flush()
-    flush()
-    return BucketPlan(tuple(buckets), len(leaves))
+    """Aggregate leaves (shape/dtype carriers) into buckets via CommPlan."""
+    counts = [int(np.prod(leaf.shape)) if leaf.shape else 1
+              for leaf in leaves]
+    nbytes = [n * jnp.dtype(leaf.dtype).itemsize
+              for n, leaf in zip(counts, leaves)]
+    plan = commplan.plan_sized(nbytes, aggr_bytes=aggr_bytes,
+                               n_channels=n_channels)
+    buckets = tuple(
+        Bucket(leaf_ids=msg.items,
+               sizes=tuple(counts[i] for i in msg.items),
+               nbytes=int(msg.nbytes),
+               channel=msg.channel)
+        for msg in plan.messages)
+    return BucketPlan(buckets, len(leaves))
 
 
 def pack(leaves: Sequence[jax.Array], bucket: Bucket,

@@ -24,6 +24,9 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from .commplan import channel_slices
+from ..compat import axis_size
+
 
 def _ring_perm(n: int, reverse: bool = False):
     if reverse:
@@ -32,11 +35,11 @@ def _ring_perm(n: int, reverse: bool = False):
 
 
 def _split_channels(x: jax.Array, k: int):
-    """Split leading dim into k interleaved streams."""
+    """Split leading dim into k interleaved streams (CommPlan round-robin)."""
     if k <= 1:
         return [x]
     assert x.shape[0] % k == 0, (x.shape, k)
-    return [x[i::k] for i in range(k)]
+    return [x[sl] for sl in channel_slices(x.shape[0], k)]
 
 
 def _merge_channels(parts, k: int, axis: int = 0):
@@ -47,8 +50,8 @@ def _merge_channels(parts, k: int, axis: int = 0):
     out = jnp.zeros((*parts[0].shape[:axis], n, *parts[0].shape[axis + 1:]),
                     parts[0].dtype)
     idx = [slice(None)] * out.ndim
-    for i, p in enumerate(parts):
-        idx[axis] = slice(i, None, k)
+    for sl, p in zip(channel_slices(n, k), parts):
+        idx[axis] = sl
         out = out.at[tuple(idx)].set(p)
     return out
 
@@ -60,7 +63,7 @@ def ring_all_gather(x: jax.Array, axis: str, *, n_channels: int = 1,
     x: the local shard.  Returns (N, *x.shape) stacked in global rank
     order, or concatenated along dim 0 if ``tiled``.
     """
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     idx = jax.lax.axis_index(axis)
     perm = _ring_perm(n)
 
@@ -87,7 +90,7 @@ def ring_reduce_scatter(x: jax.Array, axis: str, *, n_channels: int = 1
                         ) -> jax.Array:
     """Reduce-scatter via a ring: x is (N, chunk, ...) of local
     contributions in global order; returns this rank's reduced chunk."""
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     idx = jax.lax.axis_index(axis)
     perm = _ring_perm(n)
 
@@ -104,7 +107,7 @@ def ring_reduce_scatter(x: jax.Array, axis: str, *, n_channels: int = 1
         return acc
 
     if n_channels > 1:  # channel split applies to the chunk dim (dim 1)
-        parts = [x[:, i::n_channels] for i in range(n_channels)]
+        parts = [x[:, sl] for sl in channel_slices(x.shape[1], n_channels)]
         return _merge_channels([rs_one(p) for p in parts], n_channels,
                                axis=0)
     return rs_one(x)
@@ -113,7 +116,7 @@ def ring_reduce_scatter(x: jax.Array, axis: str, *, n_channels: int = 1
 def ring_all_reduce(x: jax.Array, axis: str, *, n_channels: int = 1
                     ) -> jax.Array:
     """All-reduce = reduce-scatter + all-gather over flat chunks."""
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     flat = x.reshape(-1)
     pad = (-flat.shape[0]) % (n * max(1, n_channels))
     if pad:
@@ -135,7 +138,7 @@ def ring_all_reduce_q8(x: jax.Array, axis: str) -> jax.Array:
     aggressive gradient compression in the distributed-optimization bag of
     tricks; see optim.grad_compress for the error-feedback wrapper.
     """
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     idx = jax.lax.axis_index(axis)
     perm = _ring_perm(n)
     flat = x.reshape(-1)
@@ -186,7 +189,7 @@ def collective_ag_matmul(x_shard: jax.Array, w: jax.Array, axis: str
     x_shard: (rows_local, K); w: (K, N) (replicated or K-sharded upstream).
     Returns (axis_size * rows_local, N) in global row order.
     """
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     idx = jax.lax.axis_index(axis)
     perm = _ring_perm(n)
     rows = x_shard.shape[0]
@@ -213,7 +216,7 @@ def collective_matmul_rs(x: jax.Array, w_shard: jax.Array, axis: str
     x: (M, K_local); w_shard: (K_local, N).  Returns this rank's (M/n, N)
     chunk of the fully-reduced product (row-scattered in rank order).
     """
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     idx = jax.lax.axis_index(axis)
     perm = _ring_perm(n)
     m = x.shape[0]

@@ -1,59 +1,25 @@
-"""Partition layout and sender/receiver agreement logic.
+"""Partitioned-request semantics on top of the CommPlan layer.
 
-This module carries the *semantics* of MPI-4.0 partitioned communication as
-implemented by the paper (§3.2.1), independent of transport:
-
-  * the sender and receiver may declare different partition counts; the
-    number of underlying messages is ``gcd(n_send, n_recv)`` so that every
-    partition contributes to exactly one message;
-  * messages smaller than an aggregation threshold (the paper's
-    ``MPIR_CVAR_PART_AGGR_SIZE``) are merged, the threshold acting as an
-    *upper bound* on the aggregated message size;
-  * messages are assigned round-robin to ``n_channels`` independent
-    communication resources (the paper's VCIs).
-
-The same logic is reused by the discrete-event simulator (to reproduce the
-paper's figures) and by the JAX engine (to bucket gradient leaves and map
-buckets onto collective channels).
+This module carries the *API shape* of MPI-4.0 partitioned communication as
+implemented by the paper (§3.2.1) — ``MPI_Psend_init`` fixes partition
+counts, sizes, aggregation and channel mapping once; the request then
+holds the agreed wire plan for reuse across iterations.  All planning
+logic (gcd sender/receiver agreement, aggregation upper bound, round-robin
+channel assignment) lives in :mod:`repro.core.commplan`; this is a thin
+consumer kept for the simulator and for MPI-flavoured naming.
 """
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import List, Sequence
 
+from . import commplan
+from .commplan import (WireMessage, agree_message_count,  # noqa: F401
+                       aggregate_message_count)
 
-def agree_message_count(n_send: int, n_recv: int) -> int:
-    """Paper §3.2.1: receiver picks gcd(N_send, N_recv) base messages."""
-    if n_send <= 0 or n_recv <= 0:
-        raise ValueError("partition counts must be positive")
-    return math.gcd(n_send, n_recv)
-
-
-def aggregate_message_count(n_messages: int, message_bytes: float,
-                            aggr_bytes: float) -> int:
-    """Number of wire messages after aggregation under an upper bound.
-
-    ``aggr_bytes`` is an upper bound: messages are merged while the merged
-    size stays <= aggr_bytes.  Each wire message is a whole number of base
-    messages (partitions never split across wire messages).
-    """
-    if n_messages <= 0:
-        raise ValueError("n_messages must be positive")
-    if aggr_bytes <= 0 or message_bytes <= 0:
-        return n_messages
-    group = max(1, int(aggr_bytes // message_bytes))
-    return math.ceil(n_messages / group)
-
-
-@dataclass(frozen=True)
-class Message:
-    """A wire message: a contiguous run of partitions."""
-    index: int                 # message index within the request
-    partitions: tuple          # partition ids contributing to this message
-    nbytes: float              # payload size
-    channel: int               # VCI / collective channel id
+# Backward-compatible alias: a wire message is a run of partitions.
+Message = WireMessage
 
 
 @dataclass
@@ -68,36 +34,22 @@ class PartitionedRequest:
     part_bytes: float
     aggr_bytes: float = 0.0
     n_channels: int = 1
+    plan: commplan.CommPlan = field(init=False, repr=False)
     messages: List[Message] = field(default_factory=list)
 
     def __post_init__(self):
-        n_base = agree_message_count(self.n_send_parts, self.n_recv_parts)
-        parts_per_base = self.n_send_parts // n_base
-        base_bytes = self.part_bytes * parts_per_base
-        n_wire = aggregate_message_count(n_base, base_bytes, self.aggr_bytes)
-        group = math.ceil(n_base / n_wire)
-        part_ids = list(range(self.n_send_parts))
-        self.messages = []
-        for m in range(n_wire):
-            base_lo, base_hi = m * group, min((m + 1) * group, n_base)
-            ids = tuple(part_ids[base_lo * parts_per_base:
-                                 base_hi * parts_per_base])
-            self.messages.append(Message(
-                index=m,
-                partitions=ids,
-                nbytes=len(ids) * self.part_bytes,
-                channel=m % max(1, self.n_channels),
-            ))
+        self.plan = commplan.plan_uniform(
+            self.n_send_parts, self.n_recv_parts, self.part_bytes,
+            aggr_bytes=self.aggr_bytes, n_channels=self.n_channels)
+        self.messages = list(self.plan.messages)
 
     @property
     def n_messages(self) -> int:
-        return len(self.messages)
+        return self.plan.n_messages
 
     def message_of_partition(self, part_id: int) -> Message:
-        for msg in self.messages:
-            if part_id in msg.partitions:
-                return msg
-        raise KeyError(part_id)
+        """O(1): served from the plan's precomputed partition index."""
+        return self.plan.message_of_item(part_id)
 
     def ready_times_to_send_times(self, ready: Sequence[float]) -> List[float]:
         """Earliest time each wire message is complete (all partitions ready).
@@ -108,4 +60,4 @@ class PartitionedRequest:
         """
         if len(ready) != self.n_send_parts:
             raise ValueError("need one ready time per partition")
-        return [max(ready[p] for p in msg.partitions) for msg in self.messages]
+        return self.plan.ready_times_to_send_times(ready)

@@ -20,6 +20,17 @@ discrete-event model whose resources mirror the MPICH/UCX stack:
     extra synchronization (flush round-trip / post-start-complete-wait),
     and many-window passive pays a progress-engine cost per window (§4.2.1).
 
+Architecture: each API variant is a :class:`Schedule` object registered in
+``SCHEDULES``; :func:`simulate` looks the approach up and lets the schedule
+drive a :class:`_Fabric` — a multi-rank resource model (per-rank VCI banks
+and NICs, per-directed-link wires) so a schedule can run as one flow of a
+larger scenario.  Two scenario drivers build on the same engine:
+
+  * :func:`simulate_steady_state` — N iterations reusing one persistent
+    request (amortized ``MPI_Psend_init``, warm VCI state);
+  * :func:`simulate_halo` — a 1-D halo exchange between R simulated ranks
+    (stencil pattern: send + recv per neighbor, bidirectional links).
+
 Calibration targets (validated in tests/test_simulator.py):
   fig 4: single-message small latency ~1.2 us; part==single; old-AM worse.
   fig 5: 32 threads, 1 VCI  -> part/many ~30x single.
@@ -31,7 +42,7 @@ Calibration targets (validated in tests/test_simulator.py):
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -39,12 +50,6 @@ import numpy as np
 from .partition import PartitionedRequest
 
 US = 1e-6
-
-APPROACHES = (
-    "part", "part_old", "pt2pt_single", "pt2pt_many",
-    "rma_single_passive", "rma_many_passive",
-    "rma_single_active", "rma_many_active",
-)
 
 
 @dataclass(frozen=True)
@@ -68,6 +73,9 @@ class NetConfig:
     alpha_recv: float = 0.05 * US  # receiver-side completion processing
     barrier_base: float = 0.05 * US
     barrier_log: float = 0.15 * US
+    alpha_init: float = 25.0 * US  # one-time persistent-request / window
+    #                                setup (MPI_Psend_init, MPI_Win_create)
+    alpha_init_msg: float = 0.50 * US  # per planned wire message at init
     eager_max: int = 1024         # short protocol  <= 1 KiB
     bcopy_max: int = 8192         # bcopy protocol  <= 8 KiB, then rendezvous
 
@@ -93,19 +101,34 @@ class SimResult:
 
 
 class _Fabric:
-    """Serial-resource scheduler: V VCIs -> NIC -> wire."""
+    """Serial-resource scheduler: per-rank V VCIs -> per-rank NIC ->
+    per-directed-link wire.
 
-    def __init__(self, cfg: NetConfig, n_vcis: int):
+    The default two-rank fabric with flow (0 -> 1) reproduces the paper's
+    Fig-3 sender/receiver pair; halo scenarios instantiate R ranks and run
+    bidirectional flows over distinct (src, dst) links.  State persists
+    across iterations: warm VCIs remember their last owner, so a thread
+    re-using its own VCI pays only the marginal injection, while a VCI
+    last driven by another thread pays the lock bounce — which can make
+    warm iterations *dearer* than the one-shot benchmark's all-idle VCIs
+    (``alpha_first``) for schedules that rotate threads over VCIs.
+    """
+
+    def __init__(self, cfg: NetConfig, n_vcis: int, n_ranks: int = 2):
         self.cfg = cfg
-        self.vci_free = [0.0] * max(1, n_vcis)
-        self.vci_last_thread: List[Optional[int]] = [None] * max(1, n_vcis)
-        self.nic_free = 0.0
-        self.wire_free = 0.0
+        self.n_vcis = max(1, n_vcis)
+        self.n_ranks = max(2, n_ranks)
+        self.vci_free = [[0.0] * self.n_vcis for _ in range(self.n_ranks)]
+        self.vci_last_thread: List[List[Optional[int]]] = [
+            [None] * self.n_vcis for _ in range(self.n_ranks)]
+        self.nic_free = [0.0] * self.n_ranks
+        self.wire_free: Dict[tuple, float] = {}
         self.n_messages = 0
 
-    def _inject_cost(self, vci: int, thread: int, put: bool) -> float:
+    def _inject_cost(self, rank: int, vci: int, thread: int,
+                     put: bool) -> float:
         cfg = self.cfg
-        last = self.vci_last_thread[vci]
+        last = self.vci_last_thread[rank][vci]
         if last is None:
             return cfg.alpha_put_first if put else cfg.alpha_first
         if last != thread:
@@ -113,25 +136,289 @@ class _Fabric:
         return cfg.alpha_put if put else cfg.alpha_msg
 
     def transmit(self, t_ready: float, nbytes: float, vci: int, thread: int,
-                 *, put: bool = False, am_copy: bool = False) -> float:
-        """Schedule one message; returns receiver-side arrival time."""
+                 *, put: bool = False, am_copy: bool = False,
+                 src: int = 0, dst: int = 1) -> float:
+        """Schedule one message src -> dst; returns receiver arrival time."""
         cfg = self.cfg
-        vci %= len(self.vci_free)
-        inject = self._inject_cost(vci, thread, put)
+        vci %= self.n_vcis
+        inject = self._inject_cost(src, vci, thread, put)
         if am_copy or (cfg.eager_max < nbytes <= cfg.bcopy_max):
             inject += nbytes / cfg.beta_copy  # bcopy / AM intermediate copy
-        t0 = max(t_ready, self.vci_free[vci])
+        t0 = max(t_ready, self.vci_free[src][vci])
         t1 = t0 + inject
-        self.vci_free[vci] = t1
-        self.vci_last_thread[vci] = thread
-        t2 = max(t1, self.nic_free) + cfg.alpha_nic
-        self.nic_free = t2
+        self.vci_free[src][vci] = t1
+        self.vci_last_thread[src][vci] = thread
+        t2 = max(t1, self.nic_free[src]) + cfg.alpha_nic
+        self.nic_free[src] = t2
         if not am_copy and nbytes > cfg.bcopy_max:
             t2 += 2.0 * cfg.alpha_wire  # rendezvous RTS/CTS round trip
-        t3 = max(t2, self.wire_free) + nbytes / cfg.beta
-        self.wire_free = t3
+        t3 = max(t2, self.wire_free.get((src, dst), 0.0)) + nbytes / cfg.beta
+        self.wire_free[(src, dst)] = t3
         self.n_messages += 1
         return t3 + cfg.alpha_wire + cfg.alpha_recv
+
+
+@dataclass
+class Scenario:
+    """One flow of the Fig-3 benchmark: ``n_threads`` producer threads on
+    rank ``src``, theta partitions each, sending to rank ``dst``.
+
+    ``ready[t, j]`` is the time partition j of thread t finishes compute,
+    in seconds from this flow's epoch ``t0`` (MPI_Start).  The cached
+    :meth:`request` is the persistent-request analogue: steady-state runs
+    rebuild nothing between iterations, only ``t0`` advances.
+    """
+    n_threads: int
+    theta: int
+    part_bytes: float
+    ready: np.ndarray
+    n_vcis: int = 1
+    aggr_bytes: float = 0.0
+    cfg: NetConfig = DEFAULT_NET
+    src: int = 0
+    dst: int = 1
+    t0: float = 0.0
+    _request: Optional[PartitionedRequest] = field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def n_part(self) -> int:
+        return self.n_threads * self.theta
+
+    @property
+    def total_bytes(self) -> float:
+        return self.n_part * self.part_bytes
+
+    @property
+    def start(self) -> float:
+        """MPI_Start + thread barrier (Fig 3), from this flow's epoch."""
+        return self.t0 + self.cfg.barrier(self.n_threads)
+
+    @property
+    def compute(self) -> float:
+        return float(self.ready.max())
+
+    def request(self) -> PartitionedRequest:
+        """The flow's persistent partitioned request (built once)."""
+        if self._request is None:
+            self._request = PartitionedRequest(
+                self.n_part, self.n_part, self.part_bytes,
+                aggr_bytes=self.aggr_bytes,
+                n_channels=max(1, self.n_vcis))
+        return self._request
+
+
+@dataclass(frozen=True)
+class Intent:
+    """One planned injection: what a schedule wants the fabric to send."""
+    t_ready: float
+    nbytes: float
+    vci: int
+    thread: int
+    put: bool = False
+    am_copy: bool = False
+
+
+class Schedule:
+    """One API variant of the paper's benchmark (its §2.3 taxonomy).
+
+    Pipelinable variants describe their traffic as :class:`Intent` lists
+    (``intents``), which lets multi-flow scenarios (halo exchange) merge
+    several flows in global time order on one fabric; ``run`` then injects
+    the canonical-order intents and applies ``finish``.  Variants whose
+    traffic depends on earlier arrivals (RMA epochs: the flush/complete
+    message waits for the puts) override ``run`` directly and return None
+    from ``intents``.  ``n_requests`` is the number of persistent
+    requests/windows set up once (steady-state init accounting).
+    """
+
+    name: str = ""
+
+    def intents(self, sc: Scenario) -> Optional[List[Intent]]:
+        return None
+
+    def finish(self, sc: Scenario, fab: _Fabric,
+               arrivals: List[float]) -> float:
+        """Post-traffic completion processing (e.g. barrier before Wait)."""
+        return max(arrivals)
+
+    def run(self, sc: Scenario, fab: _Fabric) -> float:
+        ints = self.intents(sc)
+        if ints is None:
+            raise NotImplementedError(f"{self.name} must override run()")
+        arrivals = [fab.transmit(i.t_ready, i.nbytes, vci=i.vci,
+                                 thread=i.thread, put=i.put,
+                                 am_copy=i.am_copy, src=sc.src, dst=sc.dst)
+                    for i in ints]
+        return self.finish(sc, fab, arrivals)
+
+    def n_requests(self, sc: Scenario) -> int:
+        return 1
+
+
+SCHEDULES: Dict[str, Schedule] = {}
+
+
+def register_schedule(schedule: Schedule) -> Schedule:
+    """Add a schedule instance to the registry (last registration wins)."""
+    if not schedule.name:
+        raise ValueError("schedule must define a name")
+    SCHEDULES[schedule.name] = schedule
+    return schedule
+
+
+class PartitionedSchedule(Schedule):
+    """Improved MPI-4.0 partitioned path (§3.2): gcd message plan,
+    aggregation under aggr_bytes, round-robin message->VCI mapping,
+    per-Pready atomic + shared-request serialization per message."""
+
+    name = "part"
+
+    def intents(self, sc: Scenario) -> List[Intent]:
+        cfg, start = sc.cfg, sc.start
+        req = sc.request()
+        pready = np.empty(sc.n_part)
+        bounce_free = 0.0  # globally-serialized atomic counter cache line
+        for t in range(sc.n_threads):
+            t_free = start
+            for j in range(sc.theta):
+                t_done = max(t_free, start + sc.ready[t, j]) + cfg.alpha_atomic
+                if sc.n_threads > 1:
+                    t_done = max(t_done, bounce_free) + cfg.alpha_bounce
+                    bounce_free = t_done
+                pready[t * sc.theta + j] = t_done
+                t_free = t_done
+        counter_free = 0.0  # shared partitioned-request state (serializing)
+        out = []
+        for msg in req.messages:
+            t_ready = max(pready[p] for p in msg.partitions)
+            if sc.n_threads > 1:
+                t_ready = max(t_ready, counter_free) + cfg.alpha_counter
+                counter_free = t_ready
+            owner = msg.partitions[-1] // sc.theta
+            out.append(Intent(t_ready, msg.nbytes, vci=msg.channel,
+                              thread=owner))
+        return out
+
+    def finish(self, sc: Scenario, fab: _Fabric,
+               arrivals: List[float]) -> float:
+        # barrier before MPI_Wait
+        return max(arrivals) + sc.cfg.barrier(sc.n_threads)
+
+    def n_requests(self, sc: Scenario) -> int:
+        return sc.request().n_messages
+
+
+class OldPartitionedSchedule(Schedule):
+    """Original AM path (§3.1): wait for CTS, copy the whole buffer,
+    single active message once every partition is ready."""
+
+    name = "part_old"
+
+    def intents(self, sc: Scenario) -> List[Intent]:
+        cfg = sc.cfg
+        t0 = (sc.start + sc.compute + cfg.barrier(sc.n_threads)
+              + cfg.alpha_wire)
+        return [Intent(t0, sc.total_bytes, vci=0, thread=0, am_copy=True)]
+
+
+class Pt2PtSingleSchedule(Schedule):
+    """Bulk synchronization: barrier until every thread is done, then one
+    persistent send from the master thread."""
+
+    name = "pt2pt_single"
+
+    def intents(self, sc: Scenario) -> List[Intent]:
+        t0 = sc.start + sc.compute + sc.cfg.barrier(sc.n_threads)
+        return [Intent(t0, sc.total_bytes, vci=0, thread=0)]
+
+
+class Pt2PtManySchedule(Schedule):
+    """One duplicated communicator per thread, one persistent request per
+    partition, issued as soon as each partition is ready."""
+
+    name = "pt2pt_many"
+
+    def intents(self, sc: Scenario) -> List[Intent]:
+        start = sc.start
+        out = []
+        for t in range(sc.n_threads):
+            t_free = start
+            for j in range(sc.theta):
+                t_issue = max(t_free, start + sc.ready[t, j])
+                out.append(Intent(t_issue, sc.part_bytes,
+                                  vci=t % max(1, sc.n_vcis), thread=t))
+                t_free = t_issue  # issue cost accounted inside the VCI queue
+        return out
+
+    def n_requests(self, sc: Scenario) -> int:
+        return sc.n_part
+
+
+class RmaSchedule(Schedule):
+    """RMA put variants: single/many windows x passive/active target."""
+
+    def __init__(self, many: bool, active: bool):
+        self.many = many
+        self.active = active
+        self.name = (f"rma_{'many' if many else 'single'}"
+                     f"_{'active' if active else 'passive'}")
+
+    def run(self, sc: Scenario, fab: _Fabric) -> float:
+        cfg, start = sc.cfg, sc.start
+        arrivals = []
+        flush_done = start
+        for t in range(sc.n_threads):
+            vci = (t % max(1, sc.n_vcis)) if self.many else 0
+            t_free = start
+            if self.active:
+                # MPI_Start on the origin waits for the target's MPI_Post
+                # exposure message (0B) — steady state: one wire latency.
+                t_free += cfg.alpha_wire
+            for j in range(sc.theta):
+                t_issue = max(t_free, start + sc.ready[t, j])
+                arr = fab.transmit(t_issue, sc.part_bytes, vci=vci, thread=t,
+                                   put=True, src=sc.src, dst=sc.dst)
+                t_free = t_issue
+                arrivals.append(arr)
+            last = max(arrivals[-sc.theta:])
+            if self.active:
+                # MPI_Complete: 0B sync message closing the access epoch.
+                done = fab.transmit(last, 0.0, vci=vci, thread=t,
+                                    src=sc.src, dst=sc.dst)
+            else:
+                # MPI_Win_flush round trip + 0B completion send.
+                done = fab.transmit(last + 2.0 * cfg.alpha_wire, 0.0,
+                                    vci=vci, thread=t,
+                                    src=sc.src, dst=sc.dst)
+            flush_done = max(flush_done, done)
+        tts = flush_done
+        if self.many:
+            # Receiver progress engine polls one window per thread (§4.2.1).
+            tts += cfg.alpha_progress * sc.n_threads
+        return tts + cfg.barrier(sc.n_threads)
+
+    def n_requests(self, sc: Scenario) -> int:
+        return sc.n_threads if self.many else 1
+
+
+register_schedule(PartitionedSchedule())
+register_schedule(OldPartitionedSchedule())
+register_schedule(Pt2PtSingleSchedule())
+register_schedule(Pt2PtManySchedule())
+register_schedule(RmaSchedule(many=False, active=False))
+register_schedule(RmaSchedule(many=True, active=False))
+register_schedule(RmaSchedule(many=False, active=True))
+register_schedule(RmaSchedule(many=True, active=True))
+
+APPROACHES = tuple(SCHEDULES)
+
+
+def _lookup(approach: str) -> Schedule:
+    sched = SCHEDULES.get(approach)
+    if sched is None:
+        raise ValueError(f"unknown approach {approach!r}; one of {APPROACHES}")
+    return sched
 
 
 def _normalize_ready(n_threads: int, theta: int,
@@ -142,6 +429,15 @@ def _normalize_ready(n_threads: int, theta: int,
     return arr
 
 
+def _make_scenario(*, n_threads: int, theta: int, part_bytes: float,
+                   ready, n_vcis: int, aggr_bytes: float, cfg: NetConfig,
+                   src: int = 0, dst: int = 1) -> Scenario:
+    return Scenario(n_threads=n_threads, theta=theta, part_bytes=part_bytes,
+                    ready=_normalize_ready(n_threads, theta, ready),
+                    n_vcis=n_vcis, aggr_bytes=aggr_bytes, cfg=cfg,
+                    src=src, dst=dst)
+
+
 def simulate(approach: str, *, n_threads: int, theta: int, part_bytes: float,
              ready=None, n_vcis: int = 1, aggr_bytes: float = 0.0,
              cfg: NetConfig = DEFAULT_NET) -> SimResult:
@@ -149,111 +445,185 @@ def simulate(approach: str, *, n_threads: int, theta: int, part_bytes: float,
 
     ``ready[t, j]`` is the time partition j of thread t finishes compute
     (seconds from MPI_Start).  The returned ``time_s`` subtracts the compute
-    time ``max(ready)`` — the paper's §2.1 metric.
+    time ``max(ready)`` — the paper's §2.1 metric.  Dispatches through the
+    ``SCHEDULES`` registry.
     """
-    if approach not in APPROACHES:
-        raise ValueError(f"unknown approach {approach!r}; one of {APPROACHES}")
-    ready = _normalize_ready(n_threads, theta, ready)
-    n_part = n_threads * theta
-    total_bytes = n_part * part_bytes
+    sched = _lookup(approach)
+    sc = _make_scenario(n_threads=n_threads, theta=theta,
+                        part_bytes=part_bytes, ready=ready, n_vcis=n_vcis,
+                        aggr_bytes=aggr_bytes, cfg=cfg)
     fab = _Fabric(cfg, n_vcis)
-    start = cfg.barrier(n_threads)  # MPI_Start + thread barrier (Fig 3)
-    compute = float(ready.max())
-
-    if approach == "pt2pt_single":
-        # Bulk synchronization: barrier until every thread is done, then one
-        # persistent send from the master thread.
-        t0 = start + compute + cfg.barrier(n_threads)
-        tts = fab.transmit(t0, total_bytes, vci=0, thread=0)
-
-    elif approach == "part_old":
-        # Original AM path (§3.1): wait for CTS, copy the whole buffer,
-        # single active message once every partition is ready.
-        t0 = start + compute + cfg.barrier(n_threads) + cfg.alpha_wire
-        tts = fab.transmit(t0, total_bytes, vci=0, thread=0, am_copy=True)
-
-    elif approach == "pt2pt_many":
-        # One duplicated communicator per thread, one persistent request per
-        # partition, issued as soon as each partition is ready.
-        arrivals = []
-        for t in range(n_threads):
-            t_free = start
-            for j in range(theta):
-                t_issue = max(t_free, start + ready[t, j])
-                arr = fab.transmit(t_issue, part_bytes,
-                                   vci=t % max(1, n_vcis), thread=t)
-                t_free = t_issue  # issue cost accounted inside the VCI queue
-                arrivals.append(arr)
-        tts = max(arrivals)
-
-    elif approach == "part":
-        # Improved MPI-4.0 partitioned path (§3.2): gcd message plan,
-        # aggregation under aggr_bytes, round-robin message->VCI mapping,
-        # per-Pready atomic + shared-request serialization per message.
-        req = PartitionedRequest(n_part, n_part, part_bytes,
-                                 aggr_bytes=aggr_bytes, n_channels=max(1, n_vcis))
-        pready = np.empty(n_part)
-        bounce_free = 0.0  # globally-serialized atomic counter cache line
-        for t in range(n_threads):
-            t_free = start
-            for j in range(theta):
-                t_done = max(t_free, start + ready[t, j]) + cfg.alpha_atomic
-                if n_threads > 1:
-                    t_done = max(t_done, bounce_free) + cfg.alpha_bounce
-                    bounce_free = t_done
-                pready[t * theta + j] = t_done
-                t_free = t_done
-        counter_free = 0.0  # shared partitioned-request state (serializing)
-        arrivals = []
-        for msg in req.messages:
-            t_ready = max(pready[p] for p in msg.partitions)
-            if n_threads > 1:
-                t_ready = max(t_ready, counter_free) + cfg.alpha_counter
-                counter_free = t_ready
-            owner = msg.partitions[-1] // theta
-            arrivals.append(fab.transmit(t_ready, msg.nbytes,
-                                         vci=msg.channel, thread=owner))
-        tts = max(arrivals) + cfg.barrier(n_threads)  # barrier before MPI_Wait
-
-    elif approach in ("rma_single_passive", "rma_many_passive",
-                      "rma_single_active", "rma_many_active"):
-        many = approach.startswith("rma_many")
-        active = approach.endswith("active")
-        arrivals = []
-        flush_done = start
-        for t in range(n_threads):
-            vci = (t % max(1, n_vcis)) if many else 0
-            t_free = start
-            if active:
-                # MPI_Start on the origin waits for the target's MPI_Post
-                # exposure message (0B) — steady state: one wire latency.
-                t_free += cfg.alpha_wire
-            for j in range(theta):
-                t_issue = max(t_free, start + ready[t, j])
-                arr = fab.transmit(t_issue, part_bytes, vci=vci, thread=t,
-                                   put=True)
-                t_free = t_issue
-                arrivals.append(arr)
-            last = max(arrivals[-theta:])
-            if active:
-                # MPI_Complete: 0B sync message closing the access epoch.
-                done = fab.transmit(last, 0.0, vci=vci, thread=t)
-            else:
-                # MPI_Win_flush round trip + 0B completion send.
-                done = fab.transmit(last + 2.0 * cfg.alpha_wire, 0.0,
-                                    vci=vci, thread=t)
-            flush_done = max(flush_done, done)
-        tts = flush_done
-        if many:
-            # Receiver progress engine polls one window per thread (§4.2.1).
-            tts += cfg.alpha_progress * n_threads
-        tts += cfg.barrier(n_threads)
-
-    else:  # pragma: no cover
-        raise AssertionError(approach)
-
-    return SimResult(time_s=tts - compute, tts_s=tts,
+    tts = sched.run(sc, fab)
+    return SimResult(time_s=tts - sc.compute, tts_s=tts,
                      n_messages=fab.n_messages, approach=approach)
+
+
+@dataclass
+class SteadyStateResult:
+    """Multi-iteration run of one flow with a persistent request."""
+    approach: str
+    n_iters: int
+    setup_s: float             # MPI_Psend_init / Win_create, paid once
+    iter_times_s: List[float]  # per-iteration time minus compute
+    tts_s: float               # absolute completion of the last iteration
+    n_messages: int
+
+    @property
+    def first_iter_s(self) -> float:
+        return self.iter_times_s[0]
+
+    @property
+    def steady_iter_s(self) -> float:
+        """Warm-state per-iteration time (last iteration)."""
+        return self.iter_times_s[-1]
+
+    @property
+    def amortized_s(self) -> float:
+        """(setup + all iterations) / n — the figure of merit the paper's
+        single-shot benchmark cannot express."""
+        return (self.setup_s + sum(self.iter_times_s)) / self.n_iters
+
+    def as_dict(self) -> dict:
+        return {
+            "scenario": "steady_state",
+            "approach": self.approach,
+            "n_iters": self.n_iters,
+            "setup_us": self.setup_s / US,
+            "first_iter_us": self.first_iter_s / US,
+            "steady_iter_us": self.steady_iter_s / US,
+            "amortized_us": self.amortized_s / US,
+            "tts_us": self.tts_s / US,
+            "n_messages": self.n_messages,
+        }
+
+
+def simulate_steady_state(approach: str, *, n_iters: int, n_threads: int,
+                          theta: int, part_bytes: float, ready=None,
+                          n_vcis: int = 1, aggr_bytes: float = 0.0,
+                          cfg: NetConfig = DEFAULT_NET) -> SteadyStateResult:
+    """N iterations of one flow, reusing the persistent request.
+
+    Iteration 0 pays the one-time setup (``alpha_init`` plus
+    ``alpha_init_msg`` per planned request/message — MPI_Psend_init builds
+    the gcd/aggregation plan once); later iterations start at the previous
+    completion with warm fabric state and settle to a constant cost.  The
+    figure of merit is ``amortized_s``.  Note the warm per-iteration time
+    can exceed the cold first iteration for multi-threaded schedules: once
+    VCIs have owners, an iteration's first message per VCI pays the
+    cross-thread lock bounce (``chi_switch``) where the one-shot benchmark
+    paid the cheaper idle-VCI ``alpha_first`` — the steady-state number is
+    the honest one.
+    """
+    if n_iters <= 0:
+        raise ValueError("n_iters must be positive")
+    sched = _lookup(approach)
+    sc = _make_scenario(n_threads=n_threads, theta=theta,
+                        part_bytes=part_bytes, ready=ready, n_vcis=n_vcis,
+                        aggr_bytes=aggr_bytes, cfg=cfg)
+    fab = _Fabric(cfg, n_vcis)
+    setup = cfg.alpha_init + cfg.alpha_init_msg * sched.n_requests(sc)
+    t = setup
+    iter_times = []
+    for _ in range(n_iters):
+        sc.t0 = t
+        tts = sched.run(sc, fab)
+        iter_times.append(tts - t - sc.compute)
+        t = tts
+    return SteadyStateResult(approach=approach, n_iters=n_iters,
+                             setup_s=setup, iter_times_s=iter_times,
+                             tts_s=t, n_messages=fab.n_messages)
+
+
+@dataclass
+class HaloResult:
+    """1-D halo exchange between R simulated ranks."""
+    approach: str
+    n_ranks: int
+    periodic: bool
+    rank_tts_s: List[float]    # per-rank completion (all halos received)
+    time_s: float              # max completion minus compute
+    tts_s: float
+    n_messages: int
+
+    @property
+    def time_us(self) -> float:
+        return self.time_s / US
+
+    def as_dict(self) -> dict:
+        return {
+            "scenario": "halo",
+            "approach": self.approach,
+            "n_ranks": self.n_ranks,
+            "periodic": self.periodic,
+            "time_us": self.time_us,
+            "tts_us": self.tts_s / US,
+            "rank_tts_us": [t / US for t in self.rank_tts_s],
+            "n_messages": self.n_messages,
+        }
+
+
+def _halo_neighbors(rank: int, n_ranks: int, periodic: bool) -> List[int]:
+    if periodic:
+        return [(rank - 1) % n_ranks, (rank + 1) % n_ranks]
+    return [d for d in (rank - 1, rank + 1) if 0 <= d < n_ranks]
+
+
+def simulate_halo(approach: str, *, n_ranks: int, theta: int,
+                  part_bytes: float, n_threads: int = 1, ready=None,
+                  n_vcis: int = 1, aggr_bytes: float = 0.0,
+                  periodic: bool = True,
+                  cfg: NetConfig = DEFAULT_NET) -> HaloResult:
+    """1-D stencil halo exchange: every rank sends its theta boundary
+    partitions to each neighbor and completes when both halos arrive.
+
+    Each (rank -> neighbor) direction is one flow of the registered
+    schedule, all sharing one R-rank fabric — so both directions of a link
+    and both flows out of a rank contend for the rank's VCIs/NIC exactly
+    as the sender of the paper's benchmark does.  ``ready`` has the usual
+    (n_threads, theta) shape and applies per rank (bulk-synchronous
+    stencil step).
+    """
+    if n_ranks < 2:
+        raise ValueError("halo exchange needs at least 2 ranks")
+    sched = _lookup(approach)
+    fab = _Fabric(cfg, n_vcis, n_ranks=n_ranks)
+    ready_arr = _normalize_ready(n_threads, theta, ready)
+    incoming: List[List[float]] = [[] for _ in range(n_ranks)]
+    compute = float(ready_arr.max())
+    flows = []
+    for rank in range(n_ranks):
+        for dst in _halo_neighbors(rank, n_ranks, periodic):
+            sc = Scenario(n_threads=n_threads, theta=theta,
+                          part_bytes=part_bytes, ready=ready_arr,
+                          n_vcis=n_vcis, aggr_bytes=aggr_bytes, cfg=cfg,
+                          src=rank, dst=dst)
+            ints = sched.intents(sc)
+            if ints is None:
+                # Dependent traffic (RMA epochs): flows serialize per rank.
+                incoming[dst].append(sched.run(sc, fab))
+            else:
+                flows.append((sc, ints))
+    # Merge all flows' intents in global time order so concurrent flows
+    # interleave on shared VCIs/NICs/links instead of queueing behind one
+    # another's last injection (stable across flows on ties).
+    events = sorted(((i.t_ready, f, p) for f, (_, ints) in enumerate(flows)
+                     for p, i in enumerate(ints)),
+                    key=lambda e: e[0])
+    arrivals: List[List[float]] = [[] for _ in flows]
+    for _, f, p in events:
+        sc, ints = flows[f]
+        i = ints[p]
+        arrivals[f].append(fab.transmit(i.t_ready, i.nbytes, vci=i.vci,
+                                        thread=i.thread, put=i.put,
+                                        am_copy=i.am_copy,
+                                        src=sc.src, dst=sc.dst))
+    for f, (sc, _) in enumerate(flows):
+        incoming[sc.dst].append(sched.finish(sc, fab, arrivals[f]))
+    rank_tts = [max(arr) if arr else 0.0 for arr in incoming]
+    tts = max(rank_tts)
+    return HaloResult(approach=approach, n_ranks=n_ranks, periodic=periodic,
+                      rank_tts_s=rank_tts, time_s=tts - compute, tts_s=tts,
+                      n_messages=fab.n_messages)
 
 
 def sweep_sizes(approach: str, sizes: Sequence[int], **kw) -> Dict[int, SimResult]:

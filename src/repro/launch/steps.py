@@ -30,6 +30,7 @@ from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
 from repro.optim.schedule import warmup_cosine
 
 from .mesh import all_axes, dp_axes, dp_size, model_size
+from repro.compat import shard_map
 
 
 @dataclass(frozen=True)
@@ -161,7 +162,7 @@ def make_train_step(cfg, mesh, scfg: StepConfig, *, seq_len: int,
         cfg, seq_len, global_batch, mesh, with_labels=True)
 
     params_struct = lm.param_shapes(cfg)
-    grad_fn = jax.shard_map(
+    grad_fn = shard_map(
         vg, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P(), params_struct),
                   batch_local_specs),
@@ -267,7 +268,7 @@ def _flash_decode_fn(mesh, global_batch: int):
                                       window=window_,
                                       attn_softcap=attn_softcap, scale=scale)
 
-        return jax.shard_map(
+        return shard_map(
             inner, mesh=mesh,
             in_specs=(P(), kv_spec, kv_spec, P(), P()),
             out_specs=P(), check_vma=False,

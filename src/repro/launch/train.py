@@ -30,6 +30,7 @@ from repro.launch.steps import StepConfig, make_train_step
 from repro.models import lm
 from repro.optim.adamw import AdamWConfig, init_opt_state
 from repro.runtime import elastic
+from repro.compat import set_mesh
 from repro.runtime.fault_tolerance import (Heartbeat, StragglerMonitor,
                                            run_training_loop)
 
@@ -93,7 +94,7 @@ def main():
                       param_dtype=args.param_dtype, peak_lr=args.peak_lr,
                       warmup_steps=max(args.steps // 10, 1),
                       total_steps=args.steps, seq_parallel=plan.model > 1)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         step_fn, _, _, shardings = make_train_step(
             cfg, mesh, scfg, seq_len=args.seq_len,
             global_batch=args.global_batch)

@@ -1,0 +1,88 @@
+"""Deterministic fallback for the slice of the hypothesis API these tests
+use, so tier-1 collection works in environments without hypothesis.
+
+Real hypothesis is preferred when importable (see the try/except in each
+test module); this shim keeps the same decorator shape and runs each test
+over a fixed, seeded sample of the strategy space: boundary values first,
+then pseudo-random draws, identical on every run.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+from typing import Any, Callable, List
+
+
+class _Strategy:
+    def __init__(self, sample: Callable[[random.Random], Any],
+                 boundaries: List[Any]):
+        self._sample = sample
+        self.boundaries = boundaries
+
+    def draw(self, i: int, rng: random.Random) -> Any:
+        if i < len(self.boundaries):
+            return self.boundaries[i]
+        return self._sample(rng)
+
+
+class st:
+    """Stand-in for ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        bounds = [min_value, max_value, (min_value + max_value) // 2]
+        return _Strategy(lambda r: r.randint(min_value, max_value), bounds)
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        bounds = [min_value, max_value, 0.5 * (min_value + max_value)]
+        return _Strategy(lambda r: r.uniform(min_value, max_value), bounds)
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elems = list(elements)
+        return _Strategy(lambda r: r.choice(elems), [elems[0], elems[-1]])
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda r: r.random() < 0.5, [False, True])
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    """Record max_examples for the surrounding ``given``; deadline ignored."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strats: _Strategy, **kw_strats: _Strategy):
+    """Run the test over a deterministic sample of the strategy space."""
+    def deco(fn):
+        n_examples = getattr(fn, "_fallback_max_examples", 20)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for i in range(n_examples):
+                pos = tuple(s.draw(i, rng) for s in arg_strats)
+                kws = {k: s.draw(i, rng) for k, s in kw_strats.items()}
+                kws.update(kwargs)
+                fn(*args, *pos, **kws)
+
+        # Hide the strategy-bound parameters from pytest's fixture
+        # resolution: positional strategies bind to the trailing params,
+        # keyword strategies by name.
+        sig = inspect.signature(fn)
+        params = [p for p in sig.parameters.values()
+                  if p.name not in kw_strats]
+        if arg_strats:
+            params = params[:-len(arg_strats)]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

@@ -9,6 +9,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import chunked_collectives as cc
+from repro.compat import shard_map
 
 N = jax.device_count()
 assert N == 8, N
@@ -17,7 +18,7 @@ key = jax.random.PRNGKey(0)
 
 
 def smap(f, in_specs, out_specs):
-    return jax.jit(jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+    return jax.jit(shard_map(f, mesh=mesh, in_specs=in_specs,
                                  out_specs=out_specs, check_vma=False))
 
 

@@ -21,6 +21,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.earlybird import SyncConfig, value_and_synced_grad
 from repro.configs import get_smoke_config
 from repro.models import lm
+from repro.compat import shard_map
 
 jax.config.update("jax_threefry_partitionable", True)
 
@@ -52,7 +53,7 @@ def make_step(mode, aggr=1 << 12):
     def step(p, bt):
         return vg(p, bt)
 
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map(
         step, mesh=mesh,
         in_specs=(P(), {"tokens": P("data", None), "labels": P("data", None)}),
         out_specs=(P(), P()),

@@ -9,6 +9,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.flash_decode import flash_decode_ref, flash_decode_shard
+from repro.compat import shard_map
 
 N = jax.device_count()
 mesh = jax.make_mesh((N,), ("x",))
@@ -29,7 +30,7 @@ for pos, window, cap in [(S - 1, 0, None), (17, 0, None), (S - 1, 24, None),
                                   pos=jnp.int32(pos), window=window,
                                   attn_softcap=cap, scale=D ** -0.5)
 
-    got = jax.jit(jax.shard_map(
+    got = jax.jit(shard_map(
         f, mesh=mesh,
         in_specs=(P(None, None, None), P(None, "x", None, None),
                   P(None, "x", None, None)),

@@ -1,0 +1,267 @@
+"""CommPlan invariants, consumer equivalence, channel-stream round trips,
+and the schedule-registry scenarios (steady state, halo exchange)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # env without hypothesis: deterministic fallback
+    from _hypo import given, settings, st
+
+from repro.core import bucketing, commplan
+from repro.core import simulator as sim
+from repro.core.chunked_collectives import _merge_channels, _split_channels
+from repro.core.partition import PartitionedRequest
+
+
+class TestCommPlanInvariants:
+    @given(ns=st.integers(1, 64), nr=st.integers(1, 64),
+           aggr=st.sampled_from([0, 512, 2048, 16384]),
+           k=st.sampled_from([1, 2, 4, 8]))
+    @settings(max_examples=150, deadline=None)
+    def test_uniform_plan_covers_items_exactly_once(self, ns, nr, aggr, k):
+        plan = commplan.plan_uniform(ns, nr, 256, aggr_bytes=aggr,
+                                     n_channels=k)
+        seen = sorted(p for m in plan.messages for p in m.items)
+        assert seen == list(range(ns))
+        assert plan.total_bytes == ns * 256
+
+    @given(ns=st.integers(1, 64), nr=st.integers(1, 64))
+    @settings(max_examples=80, deadline=None)
+    def test_gcd_agreement(self, ns, nr):
+        """Without aggregation the wire count is gcd(n_send, n_recv), and
+        every message carries the same number of partitions."""
+        plan = commplan.plan_uniform(ns, nr, 64)
+        import math
+        assert plan.n_messages == math.gcd(ns, nr)
+        per = {len(m.items) for m in plan.messages}
+        assert per == {ns // math.gcd(ns, nr)}
+
+    @given(ns=st.integers(1, 64), aggr=st.sampled_from([512, 2048, 16384]))
+    @settings(max_examples=80, deadline=None)
+    def test_aggregation_is_an_upper_bound(self, ns, aggr):
+        """No multi-base message exceeds aggr_bytes; a single base message
+        may (partitions never split)."""
+        part_bytes = 192
+        plan = commplan.plan_uniform(ns, ns, part_bytes, aggr_bytes=aggr)
+        for m in plan.messages:
+            if len(m.items) > 1:
+                assert m.nbytes <= max(aggr, part_bytes)
+
+    @given(ns=st.integers(1, 64), k=st.sampled_from([1, 2, 3, 4, 8]))
+    @settings(max_examples=80, deadline=None)
+    def test_round_robin_channel_balance(self, ns, k):
+        plan = commplan.plan_uniform(ns, ns, 64, n_channels=k)
+        counts = [len(plan.channel_messages(c)) for c in range(k)]
+        assert sum(counts) == plan.n_messages
+        assert max(counts) - min(counts) <= 1
+        assert [m.channel for m in plan.messages] == \
+            list(commplan.assign_channels(plan.n_messages, k))
+
+    @given(n=st.integers(1, 40), aggr=st.sampled_from([0, 100, 4096]))
+    @settings(max_examples=60, deadline=None)
+    def test_sized_plan_covers_items_in_order(self, n, aggr):
+        sizes = [(i * 37) % 900 + 1 for i in range(n)]
+        plan = commplan.plan_sized(sizes, aggr_bytes=aggr)
+        seen = [i for m in plan.messages for i in m.items]
+        assert seen == list(range(n))  # greedy keeps leaf order
+        for m in plan.messages:
+            if len(m.items) > 1 and aggr > 0:
+                assert m.nbytes <= aggr
+
+    def test_message_of_item_constant_time_index(self):
+        plan = commplan.plan_uniform(4096, 4096, 64, aggr_bytes=1024)
+        for item in (0, 1, 4095, 2048):
+            msg = plan.message_of_item(item)
+            assert item in msg.items
+        with pytest.raises(KeyError):
+            plan.message_of_item(4096)
+        with pytest.raises(KeyError):
+            plan.message_of_item(-1)
+
+    def test_malformed_plan_rejected(self):
+        m0 = commplan.WireMessage(0, (0, 0), 128, 0)
+        with pytest.raises(ValueError):
+            commplan.CommPlan((m0,), 2)  # item 0 twice, item 1 missing
+
+
+class TestConsumerEquivalence:
+    """Exactly one aggregation/channel implementation: both consumers must
+    reproduce plan_uniform / plan_sized verbatim."""
+
+    @given(ns=st.integers(1, 48), aggr=st.sampled_from([0, 512, 8192]),
+           k=st.sampled_from([1, 2, 4]))
+    @settings(max_examples=60, deadline=None)
+    def test_partitioned_request_is_plan_uniform(self, ns, aggr, k):
+        req = PartitionedRequest(ns, ns, 256, aggr_bytes=aggr, n_channels=k)
+        plan = commplan.plan_uniform(ns, ns, 256, aggr_bytes=aggr,
+                                     n_channels=k)
+        assert tuple(req.messages) == plan.messages
+        for p in range(ns):
+            assert req.message_of_partition(p) == plan.message_of_item(p)
+
+    @given(n=st.integers(1, 24), aggr_kib=st.sampled_from([0, 1, 16]),
+           k=st.sampled_from([1, 2, 4]))
+    @settings(max_examples=40, deadline=None)
+    def test_bucket_plan_is_plan_sized(self, n, aggr_kib, k):
+        leaves = [jnp.zeros(((i % 7 + 1) * 64,), jnp.float32)
+                  for i in range(n)]
+        aggr = aggr_kib << 10
+        bplan = bucketing.make_plan(leaves, aggr, n_channels=k)
+        sizes = [leaf.size * leaf.dtype.itemsize for leaf in leaves]
+        cplan = commplan.plan_sized(sizes, aggr_bytes=aggr, n_channels=k)
+        assert bplan.n_buckets == cplan.n_messages
+        for b, m in zip(bplan.buckets, cplan.messages):
+            assert b.leaf_ids == m.items
+            assert b.nbytes == int(m.nbytes)
+            assert b.channel == m.channel
+            assert b.sizes == tuple(leaves[i].size for i in m.items)
+
+
+class TestChannelStreams:
+    @given(rows=st.sampled_from([4, 8, 24]), k=st.sampled_from([1, 2, 4]),
+           seed=st.integers(0, 4))
+    @settings(max_examples=20, deadline=None)
+    def test_split_merge_round_trip(self, rows, k, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((rows, 3)).astype(np.float32))
+        streams = _split_channels(x, k)
+        assert len(streams) == max(1, k)
+        merged = _merge_channels(streams, k)
+        np.testing.assert_array_equal(np.asarray(merged), np.asarray(x))
+
+    @given(rows=st.sampled_from([6, 12]), k=st.sampled_from([2, 3]))
+    @settings(max_examples=10, deadline=None)
+    def test_streams_follow_commplan_round_robin(self, rows, k):
+        x = jnp.arange(rows, dtype=jnp.int32)
+        streams = _split_channels(x, k)
+        for stream, idx in zip(streams, commplan.channel_streams(rows, k)):
+            np.testing.assert_array_equal(np.asarray(stream), np.array(idx))
+
+    def test_merge_along_axis1(self):
+        x = jnp.arange(24, dtype=jnp.int32).reshape(4, 6)
+        parts = [x[:, sl] for sl in commplan.channel_slices(6, 3)]
+        merged = _merge_channels(parts, 3, axis=1)
+        np.testing.assert_array_equal(np.asarray(merged), np.asarray(x))
+
+
+class TestScheduleRegistry:
+    def test_every_approach_registered_and_dispatches(self):
+        assert set(sim.APPROACHES) == set(sim.SCHEDULES)
+        for ap in sim.APPROACHES:
+            r = sim.simulate(ap, n_threads=2, theta=2, part_bytes=256)
+            assert np.isfinite(r.time_s) and r.time_s > 0
+
+    def test_unknown_approach_raises(self):
+        with pytest.raises(ValueError, match="unknown approach"):
+            sim.simulate("smoke_signals", n_threads=1, theta=1,
+                         part_bytes=64)
+
+    def test_registry_is_extensible(self):
+        class Free(sim.Schedule):
+            name = "test_free_lunch"
+
+            def intents(self, sc):
+                return [sim.Intent(sc.start, sc.total_bytes, 0, 0)]
+
+        sim.register_schedule(Free())
+        try:
+            r = sim.simulate("test_free_lunch", n_threads=1, theta=4,
+                             part_bytes=512)
+            assert r.n_messages == 1
+        finally:
+            del sim.SCHEDULES["test_free_lunch"]
+
+
+class TestSteadyState:
+    KW = dict(n_threads=4, theta=4, part_bytes=4096, n_vcis=4,
+              aggr_bytes=8192)
+
+    def test_first_iteration_matches_single_shot(self):
+        ss = sim.simulate_steady_state("part", n_iters=1, **self.KW)
+        one = sim.simulate("part", **self.KW)
+        assert ss.first_iter_s == pytest.approx(one.time_s, rel=1e-12)
+
+    @given(ap=st.sampled_from(["part", "pt2pt_single", "pt2pt_many"]))
+    @settings(max_examples=6, deadline=None)
+    def test_setup_amortizes_away(self, ap):
+        a1 = sim.simulate_steady_state(ap, n_iters=1, **self.KW)
+        a64 = sim.simulate_steady_state(ap, n_iters=64, **self.KW)
+        assert a64.amortized_s < a1.amortized_s
+        assert a64.amortized_s < a64.setup_s + a64.first_iter_s
+        # warm steady-state cost approaches the marginal iteration time
+        assert a64.amortized_s == pytest.approx(
+            a64.steady_iter_s, rel=0.25)
+
+    def test_iter_times_settle(self):
+        ss = sim.simulate_steady_state("pt2pt_single", n_iters=16, **self.KW)
+        assert ss.steady_iter_s <= ss.first_iter_s
+        # after warm-up every iteration costs the same
+        tail = ss.iter_times_s[4:]
+        assert max(tail) == pytest.approx(min(tail), rel=1e-9)
+
+    def test_message_count_scales_with_iters(self):
+        s4 = sim.simulate_steady_state("part", n_iters=4, **self.KW)
+        s8 = sim.simulate_steady_state("part", n_iters=8, **self.KW)
+        assert s8.n_messages == 2 * s4.n_messages
+
+    def test_as_dict_is_json_ready(self):
+        import json
+        d = sim.simulate_steady_state("part", n_iters=2, **self.KW).as_dict()
+        json.dumps(d)
+        assert d["scenario"] == "steady_state"
+
+
+class TestHaloExchange:
+    KW = dict(theta=4, part_bytes=1 << 16, n_vcis=2)
+
+    def test_needs_two_ranks(self):
+        with pytest.raises(ValueError):
+            sim.simulate_halo("part", n_ranks=1, **self.KW)
+
+    @given(ap=st.sampled_from(list(sim.APPROACHES)),
+           ranks=st.sampled_from([2, 3, 4, 8]))
+    @settings(max_examples=24, deadline=None)
+    def test_all_approaches_run(self, ap, ranks):
+        r = sim.simulate_halo(ap, n_ranks=ranks, **self.KW)
+        assert np.isfinite(r.time_s) and r.time_s > 0
+        assert len(r.rank_tts_s) == ranks
+
+    def test_periodic_ring_is_symmetric(self):
+        r = sim.simulate_halo("part", n_ranks=6, **self.KW)
+        assert max(r.rank_tts_s) == pytest.approx(min(r.rank_tts_s),
+                                                  rel=1e-9)
+
+    def test_open_chain_edges_finish_no_later(self):
+        r = sim.simulate_halo("part", n_ranks=6, periodic=False, **self.KW)
+        interior = max(r.rank_tts_s[1:-1])
+        assert r.rank_tts_s[0] <= interior
+        assert r.rank_tts_s[-1] <= interior
+
+    def test_message_count(self):
+        # periodic ring: 2 flows per rank, one message per partition
+        r = sim.simulate_halo("pt2pt_many", n_ranks=4, **self.KW)
+        assert r.n_messages == 4 * 2 * self.KW["theta"]
+        # bulk: one message per flow
+        rb = sim.simulate_halo("pt2pt_single", n_ranks=4, **self.KW)
+        assert rb.n_messages == 4 * 2
+
+    def test_early_bird_gain_when_delay_dominates(self):
+        """Stencil early-bird: with the last boundary partition delayed
+        beyond one link's wire time, the partitioned path hides the send
+        of the ready partitions behind the delay; bulk cannot."""
+        part_bytes = 4 << 20
+        ready = sim.delayed_ready(1, 4, part_bytes, 250.0)
+        tp = sim.simulate_halo("part", n_ranks=4, theta=4,
+                               part_bytes=part_bytes, ready=ready)
+        tb = sim.simulate_halo("pt2pt_single", n_ranks=4, theta=4,
+                               part_bytes=part_bytes, ready=ready)
+        assert tb.time_s / tp.time_s > 2.0
+
+    def test_as_dict_is_json_ready(self):
+        import json
+        d = sim.simulate_halo("part", n_ranks=3, **self.KW).as_dict()
+        json.dumps(d)
+        assert d["scenario"] == "halo"

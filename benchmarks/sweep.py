@@ -1,0 +1,119 @@
+"""Sweep CLI: run the declarative experiment specs, emit/check baselines.
+
+  python -m benchmarks.sweep --smoke                  # reduced grids (CI)
+  python -m benchmarks.sweep --full --jobs 4          # full grids, 4 procs
+  python -m benchmarks.sweep --smoke --check BENCH_scenarios.json
+  python -m benchmarks.sweep --update BENCH_scenarios.json   # regenerate
+
+``--check`` diffs the fresh results against a committed golden baseline
+and exits non-zero on any out-of-tolerance metric; ``--update`` runs the
+full grids and rewrites the baseline document.  ``--out`` dumps the raw
+results as JSON (CI uploads it as an artifact).  The Fig-5/Fig-6
+contention crossover (part/many ~ single at 32 VCIs, >> single at 1 VCI)
+is printed whenever the fig6 spec ran.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.experiments import (SPECS, compare_to_baseline,
+                               contention_crossover, make_baseline,
+                               run_specs)
+
+
+def _parse_args(argv):
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.sweep", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the reduced smoke grids (default)")
+    ap.add_argument("--full", action="store_true",
+                    help="run the full grids")
+    ap.add_argument("--specs", default="",
+                    help="comma-separated spec names (default: all)")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="process-pool width for scenario runs")
+    ap.add_argument("--out", default="",
+                    help="write raw results JSON to this path")
+    ap.add_argument("--check", default="",
+                    help="baseline JSON to diff against (exit 1 on drift)")
+    ap.add_argument("--update", default="",
+                    help="run full grids and (re)write this baseline JSON")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = _parse_args(argv)
+    mode = "full" if (args.full or args.update) else "smoke"
+    if args.specs:
+        names = [n.strip() for n in args.specs.split(",") if n.strip()]
+        unknown = [n for n in names if n not in SPECS]
+        if unknown:
+            print(f"unknown specs {unknown}; have {sorted(SPECS)}",
+                  file=sys.stderr)
+            return 2
+        specs = [SPECS[n] for n in names]
+    else:
+        specs = list(SPECS.values())
+
+    results = run_specs(specs, mode=mode, jobs=args.jobs)
+    for name, recs in results.items():
+        print(f"# {name}: {len(recs)} records ({mode})")
+
+    cross = contention_crossover(results)
+    for ap, ratios in cross.items():
+        detail = ", ".join(f"{k}={v:.2f}x" for k, v in ratios.items())
+        print(f"# crossover {ap} vs pt2pt_single: {detail}")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"mode": mode, "results": results}, f, indent=2,
+                      sort_keys=True)
+        print(f"# results written to {args.out}", file=sys.stderr)
+
+    if args.update:
+        doc = make_baseline(specs, results)
+        if args.specs:
+            # Partial update: keep the unselected specs' records by merging
+            # into the existing document instead of overwriting it.
+            try:
+                with open(args.update) as f:
+                    old = json.load(f)
+            except (FileNotFoundError, json.JSONDecodeError):
+                old = None
+            if old is None or old.get("version") != doc["version"]:
+                print("--update with --specs needs an existing baseline of"
+                      " the same version to merge into; run a full --update"
+                      " first", file=sys.stderr)
+                return 2
+            doc["specs"] = {**old["specs"], **doc["specs"]}
+        with open(args.update, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# baseline written to {args.update}", file=sys.stderr)
+
+    if args.check:
+        try:
+            with open(args.check) as f:
+                doc = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError) as e:
+            print(f"# cannot read baseline {args.check}: {e}",
+                  file=sys.stderr)
+            return 2
+        violations = compare_to_baseline(doc, results)
+        if violations:
+            print(f"# BASELINE DRIFT ({len(violations)} violations):",
+                  file=sys.stderr)
+            for v in violations:
+                print(f"#   {v}", file=sys.stderr)
+            return 1
+        n = sum(len(r) for r in results.values())
+        print(f"# baseline check passed: {n} records within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

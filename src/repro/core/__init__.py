@@ -2,6 +2,7 @@
 
   perfmodel            — closed-form gain/delay-rate model (paper §2.2, App A)
   simulator            — schedule registry + multi-rank fabric + scenarios
+  topology             — N-D Cartesian rank grids + per-dimension face payloads
   commplan             — THE plan layer: gcd agreement, aggregation, channels
   partition            — MPI-flavoured persistent-request view of commplan
   bucketing            — gradient-leaf aggregation (MPIR_CVAR_PART_AGGR_SIZE)
@@ -10,7 +11,7 @@
   flash_decode         — partitioned-KV decode attention with LSE combine
 """
 
-from . import commplan, perfmodel, simulator  # noqa: F401
+from . import commplan, perfmodel, simulator, topology  # noqa: F401
 from .bucketing import Bucket, BucketPlan, bucketed_apply, make_plan  # noqa: F401
 from .commplan import (CommPlan, WireMessage, channel_slices,  # noqa: F401
                        channel_streams, plan_sized, plan_uniform)
@@ -18,3 +19,4 @@ from .earlybird import (SyncConfig, finalize_grads, make_layer_hook,  # noqa: F4
                         value_and_synced_grad)
 from .partition import (PartitionedRequest, agree_message_count,  # noqa: F401
                         aggregate_message_count)
+from .topology import CartTopology, HaloSpec  # noqa: F401

@@ -37,6 +37,8 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
+import numpy as np
+
 US_PER_MB_TO_S_PER_B = 1e-12  # 1 µs/MB = 1e-6 s / 1e6 B
 
 
@@ -126,11 +128,34 @@ class Workload:
         """eq (4) evaluated with this workload's delay rate."""
         return eta_large(n_threads, theta, self.gamma(theta), beta)
 
+    def sample_partition_seconds(self, n_threads: int, theta: int,
+                                 s_part: float,
+                                 rng: np.random.Generator) -> np.ndarray:
+        """Appendix-A noise model: per-partition compute time drawn as
+        ``mu * S_part * N(1, sigma)`` with ``sigma = (eps + delta) / 2``,
+        clipped at zero.  Shape ``(n_threads, theta)``."""
+        per = self.mu_s_per_b * s_part * rng.normal(
+            1.0, max(self.sigma, 0.0), size=(n_threads, theta))
+        return np.maximum(per, 0.0)
+
+    def sample_ready(self, n_threads: int, theta: int, s_part: float,
+                     rng: np.random.Generator) -> np.ndarray:
+        """Per-partition ready times: noise-model compute accumulated
+        sequentially on each thread (the simulator's ``ready`` array).
+        The expected spread between first and last ready time is eq (8)'s
+        ``D = gamma_theta * S_part`` — validated in
+        tests/test_crossvalidation.py."""
+        return self.sample_partition_seconds(
+            n_threads, theta, s_part, rng).cumsum(axis=1)
+
 
 # The paper's two worked examples (App. A.2).
 FFT = Workload(ai=5.0, ci=1.0, eps=0.04, delta=0.0)
 STENCIL = Workload(ai=1.0 / 13.0, ci=(66.0 / 64.0) ** 3 - 1.0,
                    eps=0.04, delta=0.5)
+
+# Named registry (sweep specs and CLIs reference workloads by name).
+WORKLOADS = {"fft": FFT, "stencil": STENCIL}
 
 # Network constants.
 MELUXINA_BETA = 25e9          # 200 Gb/s HDR IB, as used in the paper's figures

@@ -29,7 +29,15 @@ larger scenario.  Two scenario drivers build on the same engine:
   * :func:`simulate_steady_state` — N iterations reusing one persistent
     request (amortized ``MPI_Psend_init``, warm VCI state);
   * :func:`simulate_halo` — a 1-D halo exchange between R simulated ranks
-    (stencil pattern: send + recv per neighbor, bidirectional links).
+    (stencil pattern: send + recv per neighbor, bidirectional links);
+  * :func:`simulate_stencil` — the N-dimensional generalization: a
+    Cartesian rank grid (:mod:`repro.core.topology`) with one flow per
+    directed face and per-dimension face sizes derived from a rank-local
+    cell block (anisotropic blocks give order-of-magnitude size spreads);
+  * :func:`simulate_imbalance` — a ring exchange where every rank's
+    per-partition compute times are drawn from a
+    :class:`~repro.core.perfmodel.Workload`'s (eps, delta) noise model,
+    closing the loop between the analytic model and this engine.
 
 Calibration targets (validated in tests/test_simulator.py):
   fig 4: single-message small latency ~1.2 us; part==single; old-AM worse.
@@ -48,6 +56,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from .partition import PartitionedRequest
+from .topology import CartTopology, HaloSpec
 
 US = 1e-6
 
@@ -124,6 +133,7 @@ class _Fabric:
         self.nic_free = [0.0] * self.n_ranks
         self.wire_free: Dict[tuple, float] = {}
         self.n_messages = 0
+        self.sent_per_rank = [0] * self.n_ranks  # wire messages injected
 
     def _inject_cost(self, rank: int, vci: int, thread: int,
                      put: bool) -> float:
@@ -155,6 +165,7 @@ class _Fabric:
         t3 = max(t2, self.wire_free.get((src, dst), 0.0)) + nbytes / cfg.beta
         self.wire_free[(src, dst)] = t3
         self.n_messages += 1
+        self.sent_per_rank[src] += 1
         return t3 + cfg.alpha_wire + cfg.alpha_recv
 
 
@@ -562,10 +573,39 @@ class HaloResult:
         }
 
 
-def _halo_neighbors(rank: int, n_ranks: int, periodic: bool) -> List[int]:
-    if periodic:
-        return [(rank - 1) % n_ranks, (rank + 1) % n_ranks]
-    return [d for d in (rank - 1, rank + 1) if 0 <= d < n_ranks]
+def _run_flows(sched: Schedule, fab: _Fabric,
+               scenarios: Sequence[Scenario]) -> List[List[float]]:
+    """Run many flows of one schedule on a shared fabric.
+
+    Pipelinable flows merge their intents in global time order so
+    concurrent flows interleave on shared VCIs/NICs/links instead of
+    queueing behind one another's last injection (stable across flows on
+    ties).  Dependent-traffic schedules (RMA epochs) run whole, in
+    enumeration order.  Returns, per rank, the finish time of each flow
+    arriving at that rank.
+    """
+    incoming: List[List[float]] = [[] for _ in range(fab.n_ranks)]
+    flows = []
+    for sc in scenarios:
+        ints = sched.intents(sc)
+        if ints is None:
+            incoming[sc.dst].append(sched.run(sc, fab))
+        else:
+            flows.append((sc, ints))
+    events = sorted(((i.t_ready, f, p) for f, (_, ints) in enumerate(flows)
+                     for p, i in enumerate(ints)),
+                    key=lambda e: e[0])
+    arrivals: List[List[float]] = [[] for _ in flows]
+    for _, f, p in events:
+        sc, ints = flows[f]
+        i = ints[p]
+        arrivals[f].append(fab.transmit(i.t_ready, i.nbytes, vci=i.vci,
+                                        thread=i.thread, put=i.put,
+                                        am_copy=i.am_copy,
+                                        src=sc.src, dst=sc.dst))
+    for f, (sc, _) in enumerate(flows):
+        incoming[sc.dst].append(sched.finish(sc, fab, arrivals[f]))
+    return incoming
 
 
 def simulate_halo(approach: str, *, n_ranks: int, theta: int,
@@ -581,49 +621,208 @@ def simulate_halo(approach: str, *, n_ranks: int, theta: int,
     and both flows out of a rank contend for the rank's VCIs/NIC exactly
     as the sender of the paper's benchmark does.  ``ready`` has the usual
     (n_threads, theta) shape and applies per rank (bulk-synchronous
-    stencil step).
+    stencil step).  The 1-D special case of :func:`simulate_stencil`,
+    kept for its exact partition-size semantics and flat result shape.
     """
     if n_ranks < 2:
         raise ValueError("halo exchange needs at least 2 ranks")
     sched = _lookup(approach)
+    topo = CartTopology.create((n_ranks,), periodic)
     fab = _Fabric(cfg, n_vcis, n_ranks=n_ranks)
     ready_arr = _normalize_ready(n_threads, theta, ready)
-    incoming: List[List[float]] = [[] for _ in range(n_ranks)]
     compute = float(ready_arr.max())
-    flows = []
-    for rank in range(n_ranks):
-        for dst in _halo_neighbors(rank, n_ranks, periodic):
-            sc = Scenario(n_threads=n_threads, theta=theta,
+    scenarios = [Scenario(n_threads=n_threads, theta=theta,
                           part_bytes=part_bytes, ready=ready_arr,
                           n_vcis=n_vcis, aggr_bytes=aggr_bytes, cfg=cfg,
-                          src=rank, dst=dst)
-            ints = sched.intents(sc)
-            if ints is None:
-                # Dependent traffic (RMA epochs): flows serialize per rank.
-                incoming[dst].append(sched.run(sc, fab))
-            else:
-                flows.append((sc, ints))
-    # Merge all flows' intents in global time order so concurrent flows
-    # interleave on shared VCIs/NICs/links instead of queueing behind one
-    # another's last injection (stable across flows on ties).
-    events = sorted(((i.t_ready, f, p) for f, (_, ints) in enumerate(flows)
-                     for p, i in enumerate(ints)),
-                    key=lambda e: e[0])
-    arrivals: List[List[float]] = [[] for _ in flows]
-    for _, f, p in events:
-        sc, ints = flows[f]
-        i = ints[p]
-        arrivals[f].append(fab.transmit(i.t_ready, i.nbytes, vci=i.vci,
-                                        thread=i.thread, put=i.put,
-                                        am_copy=i.am_copy,
-                                        src=sc.src, dst=sc.dst))
-    for f, (sc, _) in enumerate(flows):
-        incoming[sc.dst].append(sched.finish(sc, fab, arrivals[f]))
+                          src=flow.src, dst=flow.dst)
+                 for flow in topo.flows()]
+    incoming = _run_flows(sched, fab, scenarios)
     rank_tts = [max(arr) if arr else 0.0 for arr in incoming]
     tts = max(rank_tts)
     return HaloResult(approach=approach, n_ranks=n_ranks, periodic=periodic,
                       rank_tts_s=rank_tts, time_s=tts - compute, tts_s=tts,
                       n_messages=fab.n_messages)
+
+
+@dataclass
+class StencilResult:
+    """N-D Cartesian stencil halo exchange over a rank grid."""
+    approach: str
+    dims: tuple
+    periodic: tuple
+    face_bytes: tuple          # per-dimension face payload, bytes
+    rank_tts_s: List[float]    # per-rank completion (all faces received)
+    sent_per_rank: List[int]   # wire messages injected by each rank
+    time_s: float              # max completion minus compute
+    tts_s: float
+    n_messages: int
+
+    @property
+    def n_ranks(self) -> int:
+        return len(self.rank_tts_s)
+
+    @property
+    def time_us(self) -> float:
+        return self.time_s / US
+
+    def as_dict(self) -> dict:
+        return {
+            "scenario": "stencil",
+            "approach": self.approach,
+            "dims": list(self.dims),
+            "periodic": list(self.periodic),
+            "n_ranks": self.n_ranks,
+            "face_bytes": list(self.face_bytes),
+            "time_us": self.time_us,
+            "tts_us": self.tts_s / US,
+            "rank_tts_us": [t / US for t in self.rank_tts_s],
+            "sent_per_rank": list(self.sent_per_rank),
+            "n_messages": self.n_messages,
+        }
+
+
+def _normalize_rank_ready(n_ranks: int, n_threads: int, theta: int,
+                          ready) -> np.ndarray:
+    """Broadcast ``ready`` to (n_ranks, n_threads, theta): None (all
+    zeros), one (n_threads, theta) table shared by every rank, or a full
+    per-rank table."""
+    if ready is None:
+        return np.zeros((n_ranks, n_threads, theta))
+    arr = np.asarray(ready, dtype=float)
+    if arr.size == n_threads * theta:
+        return np.broadcast_to(arr.reshape(n_threads, theta),
+                               (n_ranks, n_threads, theta))
+    return arr.reshape(n_ranks, n_threads, theta)
+
+
+def simulate_stencil(approach: str, *, dims: Sequence[int] = (),
+                     topo: Optional[CartTopology] = None,
+                     periodic=True, theta: int, n_threads: int = 1,
+                     local_shape: Optional[Sequence[int]] = None,
+                     bytes_per_cell: float = 8.0, halo_width: int = 1,
+                     face_bytes: Optional[Sequence[float]] = None,
+                     ready=None, n_vcis: int = 1, aggr_bytes: float = 0.0,
+                     cfg: NetConfig = DEFAULT_NET) -> StencilResult:
+    """N-dimensional Cartesian stencil halo exchange.
+
+    The rank grid comes from ``topo`` (or ``dims`` + ``periodic``); every
+    rank runs one flow of the registered schedule per face neighbor, all
+    merged in global time order on one shared fabric.  The payload of the
+    face perpendicular to dimension d is ``face_bytes[d]``, normally
+    derived from a rank-local cell block via :class:`HaloSpec`
+    (``local_shape`` x ``bytes_per_cell`` x ``halo_width``) — anisotropic
+    blocks exercise per-dimension message sizes spanning the protocol
+    switches.  Each face is split into ``n_threads * theta`` partitions
+    whose wire plan (aggregation, channel map) the schedule builds through
+    the flow's CommPlan, exactly as in the paper's benchmark.
+
+    ``ready`` is None, one (n_threads, theta) table applied to every rank,
+    or (n_ranks, n_threads, theta) per-rank tables (load imbalance).
+    """
+    if topo is None:
+        topo = CartTopology.create(dims, periodic)
+    if topo.n_ranks < 2:
+        raise ValueError("stencil exchange needs at least 2 ranks")
+    if face_bytes is None:
+        if local_shape is None:
+            raise ValueError("need local_shape (or explicit face_bytes)")
+        spec = HaloSpec.create(topo, local_shape, bytes_per_cell, halo_width)
+        face_bytes = spec.all_face_bytes()
+    else:
+        face_bytes = tuple(float(b) for b in face_bytes)
+        if len(face_bytes) != topo.n_dims:
+            raise ValueError("need one face size per dimension")
+    sched = _lookup(approach)
+    fab = _Fabric(cfg, n_vcis, n_ranks=topo.n_ranks)
+    ready_arr = _normalize_rank_ready(topo.n_ranks, n_threads, theta, ready)
+    compute = float(ready_arr.max())
+    n_part = n_threads * theta
+    scenarios = [Scenario(n_threads=n_threads, theta=theta,
+                          part_bytes=face_bytes[flow.dim] / n_part,
+                          ready=ready_arr[flow.src], n_vcis=n_vcis,
+                          aggr_bytes=aggr_bytes, cfg=cfg,
+                          src=flow.src, dst=flow.dst)
+                 for flow in topo.flows()]
+    incoming = _run_flows(sched, fab, scenarios)
+    rank_tts = [max(arr) if arr else 0.0 for arr in incoming]
+    tts = max(rank_tts)
+    return StencilResult(approach=approach, dims=topo.dims,
+                         periodic=topo.periodic, face_bytes=tuple(face_bytes),
+                         rank_tts_s=rank_tts,
+                         sent_per_rank=list(fab.sent_per_rank),
+                         time_s=tts - compute, tts_s=tts,
+                         n_messages=fab.n_messages)
+
+
+@dataclass
+class ImbalanceResult:
+    """Ring exchange under the Appendix-A per-rank compute-noise model."""
+    approach: str
+    n_ranks: int
+    theta: int
+    seed: int
+    mean_delay_s: float        # mean over ranks of the empirical ready
+    #                            spread (last - first partition ready)
+    model_delay_s: float       # eq (8): Workload.delay_seconds(theta, S)
+    rank_tts_s: List[float]
+    time_s: float
+    tts_s: float
+    n_messages: int
+
+    @property
+    def time_us(self) -> float:
+        return self.time_s / US
+
+    def as_dict(self) -> dict:
+        return {
+            "scenario": "imbalance",
+            "approach": self.approach,
+            "n_ranks": self.n_ranks,
+            "theta": self.theta,
+            "seed": self.seed,
+            "mean_delay_us": self.mean_delay_s / US,
+            "model_delay_us": self.model_delay_s / US,
+            "time_us": self.time_us,
+            "tts_us": self.tts_s / US,
+            "rank_tts_us": [t / US for t in self.rank_tts_s],
+            "n_messages": self.n_messages,
+        }
+
+
+def simulate_imbalance(approach: str, *, n_ranks: int, workload, theta: int,
+                       part_bytes: float, n_threads: int = 1,
+                       n_vcis: int = 1, aggr_bytes: float = 0.0,
+                       periodic: bool = True, seed: int = 0,
+                       cfg: NetConfig = DEFAULT_NET) -> ImbalanceResult:
+    """Ring halo exchange with per-rank load imbalance from the paper's
+    noise model.
+
+    Every rank draws its own (n_threads, theta) ready table from
+    ``workload.sample_ready`` — per-partition compute ``mu * S * N(1,
+    sigma)`` with ``sigma = (eps + delta) / 2`` accumulated along each
+    thread — so ranks finish compute at different times and the early-bird
+    injection of ready partitions is exercised against *stochastic* delays
+    rather than Fig 8's single deterministic one.  ``mean_delay_s``
+    reports the empirical spread between first and last partition-ready
+    time, averaged over ranks; the analytic counterpart is eq (8)'s
+    ``model_delay_s`` — the cross-validation tests hold the two together.
+    """
+    rng = np.random.default_rng(seed)
+    ready = np.stack([
+        workload.sample_ready(n_threads, theta, part_bytes, rng)
+        for _ in range(n_ranks)])
+    r = simulate_stencil(approach, dims=(n_ranks,), periodic=periodic,
+                         theta=theta, n_threads=n_threads,
+                         face_bytes=(n_threads * theta * part_bytes,),
+                         ready=ready, n_vcis=n_vcis, aggr_bytes=aggr_bytes,
+                         cfg=cfg)
+    delays = ready.max(axis=(1, 2)) - ready.min(axis=(1, 2))
+    return ImbalanceResult(approach=approach, n_ranks=n_ranks, theta=theta,
+                           seed=seed, mean_delay_s=float(delays.mean()),
+                           model_delay_s=workload.delay_seconds(
+                               theta, part_bytes),
+                           rank_tts_s=r.rank_tts_s, time_s=r.time_s,
+                           tts_s=r.tts_s, n_messages=r.n_messages)
 
 
 def sweep_sizes(approach: str, sizes: Sequence[int], **kw) -> Dict[int, SimResult]:
@@ -647,11 +846,10 @@ def delayed_ready(n_threads: int, theta: int, part_bytes: float,
 def sampled_ready(workload, n_threads: int, theta: int, part_bytes: float,
                   seed: int = 0) -> np.ndarray:
     """Appendix-A scenario: per-partition compute time mu*S*N(1, sigma),
-    accumulated sequentially on each thread."""
+    accumulated sequentially on each thread.  The sampling itself lives on
+    :class:`~repro.core.perfmodel.Workload` (the model owns its noise)."""
     rng = np.random.default_rng(seed)
-    per = workload.mu_s_per_b * part_bytes * rng.normal(
-        1.0, max(workload.sigma, 0.0), size=(n_threads, theta))
-    return np.maximum(per, 0.0).cumsum(axis=1)
+    return workload.sample_ready(n_threads, theta, part_bytes, rng)
 
 
 def theoretical_time(total_bytes: float, cfg: NetConfig = DEFAULT_NET) -> float:

@@ -1,0 +1,17 @@
+"""Experiments: a declarative sweep engine over the simulator's scenarios.
+
+  engine  — SweepSpec grid expansion, dedup/cached runs, process-pool
+            parallelism, golden-baseline emit + tolerance check
+  specs   — the registry: one spec per paper figure (Figs 4-8) and per
+            post-paper scenario (steady-state, 1-D halo, N-D stencil,
+            load imbalance)
+
+``python -m benchmarks.sweep`` is the CLI; ``BENCH_scenarios.json`` at
+the repo root is the committed golden baseline checked in CI and by
+``tests/test_bench_baseline.py``.
+"""
+
+from .engine import (BASELINE_VERSION, SweepSpec, compare_to_baseline,  # noqa: F401
+                     make_baseline, record_key, run_records, run_spec,
+                     run_specs)
+from .specs import SPECS, contention_crossover  # noqa: F401

@@ -1,0 +1,341 @@
+"""Declarative sweep engine: grid specs -> deduplicated scenario runs ->
+golden-baseline records.
+
+A :class:`SweepSpec` names a *runner* (one of the simulator's scenario
+drivers), a parameter grid (cartesian product over approach x threads x
+theta x VCIs x sizes x ...), and an optional reduced ``smoke`` grid that
+must be a subset of the full grid.  The engine:
+
+  * expands grids deterministically (sorted axis names, declared value
+    order) and **deduplicates** points by a canonical record key — shared
+    points across specs or modes run once per process (module cache);
+  * runs points serially or on a ``ProcessPoolExecutor`` (``jobs > 1``;
+    runners are top-level functions, so points pickle);
+  * derives per-group gain metrics against a declared baseline approach
+    (``gain_vs_<approach>`` = baseline time / this time);
+  * emits and checks versioned golden-baseline documents
+    (``BENCH_scenarios.json``): every record's metrics carry a relative
+    tolerance (per-spec default, per-metric override; message counts are
+    exact), and :func:`compare_to_baseline` returns human-readable
+    violations for CI to fail on.
+
+Records are keyed by the *full* parameter dict (fixed values included),
+so changing a spec's constants invalidates its baseline records loudly
+(missing-key violations) instead of silently comparing different runs.
+"""
+
+from __future__ import annotations
+
+import itertools
+from concurrent.futures import ProcessPoolExecutor
+from dataclasses import dataclass, field
+from typing import (Any, Dict, List, Mapping, Optional, Sequence, Tuple)
+
+from repro.core import perfmodel as pm
+from repro.core import simulator as sim
+
+BASELINE_VERSION = 1
+
+# Exact-match floor: |new - ref| <= tol_rel * |ref| + ABS_FLOOR.
+ABS_FLOOR = 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Record keys
+# ---------------------------------------------------------------------------
+
+def _fmt(v: Any) -> str:
+    if isinstance(v, (tuple, list)):
+        return "x".join(_fmt(x) for x in v)
+    if isinstance(v, float) and v == int(v):
+        return str(int(v))
+    return str(v)
+
+
+def record_key(params: Mapping[str, Any]) -> str:
+    """Canonical ``k=v,...`` key over *all* params, sorted by name."""
+    return ",".join(f"{k}={_fmt(params[k])}" for k in sorted(params))
+
+
+def parse_key(key: str) -> Dict[str, str]:
+    """Inverse of :func:`record_key` at the string level (values stay
+    strings; grids are small enough that callers compare textually)."""
+    return dict(kv.split("=", 1) for kv in key.split(","))
+
+
+# ---------------------------------------------------------------------------
+# Runners — one per simulator scenario driver.  Each takes a plain params
+# dict (picklable) and returns a flat {metric: float} dict.
+# ---------------------------------------------------------------------------
+
+def _gamma_ready(params: Mapping[str, Any]):
+    gamma = params.get("gamma", 0.0)
+    if not gamma:
+        return None
+    return sim.delayed_ready(params.get("n_threads", 1),
+                             params.get("theta", 1),
+                             params["part_bytes"], gamma)
+
+
+def run_oneshot(params: Mapping[str, Any]) -> Dict[str, float]:
+    r = sim.simulate(params["approach"],
+                     n_threads=params.get("n_threads", 1),
+                     theta=params.get("theta", 1),
+                     part_bytes=params["part_bytes"],
+                     ready=_gamma_ready(params),
+                     n_vcis=params.get("n_vcis", 1),
+                     aggr_bytes=params.get("aggr_bytes", 0.0))
+    return {"time_us": r.time_us, "n_messages": float(r.n_messages)}
+
+
+def run_steady(params: Mapping[str, Any]) -> Dict[str, float]:
+    r = sim.simulate_steady_state(params["approach"],
+                                  n_iters=params["n_iters"],
+                                  n_threads=params.get("n_threads", 1),
+                                  theta=params.get("theta", 1),
+                                  part_bytes=params["part_bytes"],
+                                  ready=_gamma_ready(params),
+                                  n_vcis=params.get("n_vcis", 1),
+                                  aggr_bytes=params.get("aggr_bytes", 0.0))
+    return {"amortized_us": r.amortized_s / sim.US,
+            "steady_iter_us": r.steady_iter_s / sim.US,
+            "setup_us": r.setup_s / sim.US,
+            "n_messages": float(r.n_messages)}
+
+
+def run_halo(params: Mapping[str, Any]) -> Dict[str, float]:
+    r = sim.simulate_halo(params["approach"],
+                          n_ranks=params["n_ranks"],
+                          theta=params.get("theta", 1),
+                          part_bytes=params["part_bytes"],
+                          n_threads=params.get("n_threads", 1),
+                          ready=_gamma_ready(params),
+                          n_vcis=params.get("n_vcis", 1),
+                          aggr_bytes=params.get("aggr_bytes", 0.0),
+                          periodic=params.get("periodic", True))
+    return {"time_us": r.time_us, "n_messages": float(r.n_messages)}
+
+
+def run_stencil(params: Mapping[str, Any]) -> Dict[str, float]:
+    r = sim.simulate_stencil(params["approach"],
+                             dims=tuple(params["dims"]),
+                             periodic=params.get("periodic", True),
+                             theta=params.get("theta", 1),
+                             n_threads=params.get("n_threads", 1),
+                             local_shape=tuple(params["local_shape"]),
+                             bytes_per_cell=params.get("bytes_per_cell", 8.0),
+                             halo_width=params.get("halo_width", 1),
+                             n_vcis=params.get("n_vcis", 1),
+                             aggr_bytes=params.get("aggr_bytes", 0.0))
+    return {"time_us": r.time_us, "n_messages": float(r.n_messages),
+            "face_bytes_min": min(r.face_bytes),
+            "face_bytes_max": max(r.face_bytes)}
+
+
+def run_imbalance(params: Mapping[str, Any]) -> Dict[str, float]:
+    r = sim.simulate_imbalance(params["approach"],
+                               n_ranks=params["n_ranks"],
+                               workload=pm.WORKLOADS[params["workload"]],
+                               theta=params.get("theta", 1),
+                               part_bytes=params["part_bytes"],
+                               n_threads=params.get("n_threads", 1),
+                               n_vcis=params.get("n_vcis", 1),
+                               aggr_bytes=params.get("aggr_bytes", 0.0),
+                               seed=params.get("seed", 0))
+    return {"time_us": r.time_us,
+            "mean_delay_us": r.mean_delay_s / sim.US,
+            "model_delay_us": r.model_delay_s / sim.US,
+            "n_messages": float(r.n_messages)}
+
+
+RUNNERS = {
+    "oneshot": run_oneshot,
+    "steady": run_steady,
+    "halo": run_halo,
+    "stencil": run_stencil,
+    "imbalance": run_imbalance,
+}
+
+# Metric a spec's gain derives from, per runner.
+PRIMARY_METRIC = {
+    "oneshot": "time_us",
+    "steady": "steady_iter_us",
+    "halo": "time_us",
+    "stencil": "time_us",
+    "imbalance": "time_us",
+}
+
+
+def _run_point(arg: Tuple[str, Dict[str, Any]]) -> Dict[str, float]:
+    """Top-level entry so ProcessPoolExecutor can pickle the work items."""
+    runner, params = arg
+    return RUNNERS[runner](params)
+
+
+# ---------------------------------------------------------------------------
+# Specs and the engine
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SweepSpec:
+    """One declarative sweep: a runner, a grid, and baseline tolerances.
+
+    ``grid`` axes are swept as a cartesian product and merged over
+    ``fixed``; ``smoke`` (optional) is a reduced grid whose expansion must
+    be a subset of the full grid's, so smoke records can be diffed against
+    a full-grid baseline.  ``baseline_approach`` derives a
+    ``gain_vs_<approach>`` metric within each group of points differing
+    only in ``approach``.
+    """
+    name: str
+    runner: str
+    grid: Mapping[str, Sequence[Any]]
+    fixed: Mapping[str, Any] = field(default_factory=dict)
+    smoke: Optional[Mapping[str, Sequence[Any]]] = None
+    baseline_approach: Optional[str] = None
+    tol_rel: float = 0.02
+    tolerances: Mapping[str, float] = field(default_factory=dict)
+    note: str = ""
+
+    def __post_init__(self):
+        if self.runner not in RUNNERS:
+            raise ValueError(f"unknown runner {self.runner!r}")
+
+    def points(self, mode: str = "full") -> List[Dict[str, Any]]:
+        """Expand the grid (or smoke sub-grid) into full param dicts."""
+        if mode not in ("full", "smoke"):
+            raise ValueError(f"mode must be 'full' or 'smoke', got {mode!r}")
+        grid = self.grid if mode == "full" else (self.smoke or self.grid)
+        axes = sorted(grid)
+        out = []
+        for combo in itertools.product(*(grid[k] for k in axes)):
+            p = dict(self.fixed)
+            p.update(zip(axes, combo))
+            out.append(p)
+        return out
+
+# Process-wide run cache: (runner, record_key) -> metrics.  Scenario runs
+# are pure functions of their params, so any spec/mode can share results.
+_CACHE: Dict[Tuple[str, str], Dict[str, float]] = {}
+
+
+def run_records(runner: str, points: Sequence[Mapping[str, Any]],
+                jobs: int = 1) -> Dict[str, Dict[str, float]]:
+    """Run deduplicated points through one runner; returns key -> metrics."""
+    keyed: Dict[str, Dict[str, Any]] = {}
+    for p in points:
+        keyed.setdefault(record_key(p), dict(p))
+    missing = [(k, p) for k, p in keyed.items() if (runner, k) not in _CACHE]
+    if jobs > 1 and len(missing) > 1:
+        with ProcessPoolExecutor(max_workers=jobs) as ex:
+            for (k, _), metrics in zip(
+                    missing,
+                    ex.map(_run_point, [(runner, p) for _, p in missing])):
+                _CACHE[(runner, k)] = metrics
+    else:
+        for k, p in missing:
+            _CACHE[(runner, k)] = _run_point((runner, p))
+    return {k: dict(_CACHE[(runner, k)]) for k in keyed}
+
+
+def _add_gains(spec: SweepSpec, keyed: Mapping[str, Dict[str, Any]],
+               records: Dict[str, Dict[str, float]]) -> None:
+    metric = PRIMARY_METRIC[spec.runner]
+    gain_name = f"gain_vs_{spec.baseline_approach}"
+    base_time: Dict[str, float] = {}
+    for key, params in keyed.items():
+        if params.get("approach") == spec.baseline_approach:
+            group = record_key({k: v for k, v in params.items()
+                                if k != "approach"})
+            base_time[group] = records[key][metric]
+    for key, params in keyed.items():
+        group = record_key({k: v for k, v in params.items()
+                            if k != "approach"})
+        if group in base_time:
+            records[key][gain_name] = base_time[group] / records[key][metric]
+
+
+def run_spec(spec: SweepSpec, mode: str = "full",
+             jobs: int = 1) -> Dict[str, Dict[str, float]]:
+    """Run one spec's grid; returns sorted key -> metrics (incl. gains)."""
+    points = spec.points(mode)
+    keyed = {record_key(p): p for p in points}
+    records = run_records(spec.runner, points, jobs=jobs)
+    if spec.baseline_approach:
+        _add_gains(spec, keyed, records)
+    return dict(sorted(records.items()))
+
+
+def run_specs(specs: Sequence[SweepSpec], mode: str = "full",
+              jobs: int = 1) -> Dict[str, Dict[str, Dict[str, float]]]:
+    return {spec.name: run_spec(spec, mode=mode, jobs=jobs)
+            for spec in specs}
+
+
+# ---------------------------------------------------------------------------
+# Golden baselines
+# ---------------------------------------------------------------------------
+
+def make_baseline(specs: Sequence[SweepSpec],
+                  results: Mapping[str, Mapping[str, Mapping[str, float]]]
+                  ) -> dict:
+    """A versioned baseline document with per-metric tolerances recorded
+    next to the values, so the checker needs no code-side configuration."""
+    doc: dict = {
+        "version": BASELINE_VERSION,
+        "generator": "python -m benchmarks.sweep --update BENCH_scenarios.json",
+        "specs": {},
+    }
+    for spec in specs:
+        doc["specs"][spec.name] = {
+            "runner": spec.runner,
+            "tol_rel": spec.tol_rel,
+            "tolerances": {"n_messages": 0.0, **dict(spec.tolerances)},
+            "records": {k: dict(m) for k, m in results[spec.name].items()},
+        }
+    return doc
+
+
+def compare_to_baseline(doc: Mapping[str, Any],
+                        results: Mapping[str, Mapping[str, Mapping[str, float]]]
+                        ) -> List[str]:
+    """Diff fresh results against a baseline document.
+
+    Every metric of every fresh record must exist in the baseline and
+    agree within the baseline's recorded tolerance.  Returns violations
+    as readable strings (empty list = pass).  Results may cover a subset
+    of the baseline's records (smoke mode); extra baseline records are
+    not an error.
+    """
+    violations: List[str] = []
+    if doc.get("version") != BASELINE_VERSION:
+        violations.append(
+            f"baseline version {doc.get('version')!r} != {BASELINE_VERSION}"
+            " (regenerate with --update)")
+        return violations
+    for name, res in results.items():
+        bspec = doc.get("specs", {}).get(name)
+        if bspec is None:
+            violations.append(f"{name}: spec missing from baseline")
+            continue
+        default_tol = bspec.get("tol_rel", 0.02)
+        tols = bspec.get("tolerances", {})
+        for key, metrics in res.items():
+            ref = bspec.get("records", {}).get(key)
+            if ref is None:
+                violations.append(f"{name}/{key}: record missing from"
+                                  " baseline (regenerate with --update)")
+                continue
+            for metric, value in metrics.items():
+                if metric not in ref:
+                    violations.append(
+                        f"{name}/{key}: metric {metric!r} missing from"
+                        " baseline")
+                    continue
+                tol = tols.get(metric, default_tol)
+                ref_v = ref[metric]
+                if abs(value - ref_v) > tol * abs(ref_v) + ABS_FLOOR:
+                    violations.append(
+                        f"{name}/{key}: {metric}={value:.6g} vs baseline"
+                        f" {ref_v:.6g} (tol_rel={tol})")
+    return violations

@@ -1,0 +1,159 @@
+"""The sweep-spec registry: Figs 4-8 and the post-paper scenarios, each
+as one declarative grid.
+
+Full grids feed the committed golden baseline (``BENCH_scenarios.json``);
+every spec's ``smoke`` grid is a subset of its full grid (enforced by
+tests/test_bench_baseline.py) so CI can re-run the smoke points and diff
+them against the same baseline in seconds.  Baseline-approach gains are
+derived per group: ``gain_vs_pt2pt_single < 1`` means slower than the
+bulk baseline, ``> 1`` means the scenario's pipelining wins.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Mapping
+
+from .engine import SweepSpec, parse_key
+
+_CONTENTION_APPROACHES = ("pt2pt_single", "part", "pt2pt_many")
+
+FIG4 = SweepSpec(
+    name="fig4_latency",
+    runner="oneshot",
+    grid={"approach": ("pt2pt_single", "part", "part_old",
+                       "rma_single_passive"),
+          "part_bytes": (64, 4096, 65536, 1 << 20, 16 << 20)},
+    fixed={"n_threads": 1, "theta": 1},
+    smoke={"approach": ("pt2pt_single", "part"),
+           "part_bytes": (64, 1 << 20)},
+    baseline_approach="pt2pt_single",
+    note="single-pair latency/bandwidth across the protocol switches",
+)
+
+FIG5 = SweepSpec(
+    name="fig5_contention",
+    runner="oneshot",
+    grid={"approach": _CONTENTION_APPROACHES,
+          "n_threads": (1, 2, 4, 8, 16, 32)},
+    fixed={"theta": 1, "part_bytes": 64, "n_vcis": 1},
+    smoke={"approach": _CONTENTION_APPROACHES, "n_threads": (32,)},
+    baseline_approach="pt2pt_single",
+    note="thread contention on one VCI: part/many collapse vs single",
+)
+
+FIG6 = SweepSpec(
+    name="fig6_vci",
+    runner="oneshot",
+    grid={"approach": _CONTENTION_APPROACHES,
+          "n_vcis": (1, 2, 4, 8, 16, 32)},
+    fixed={"n_threads": 32, "theta": 1, "part_bytes": 64},
+    smoke={"approach": _CONTENTION_APPROACHES, "n_vcis": (1, 32)},
+    baseline_approach="pt2pt_single",
+    note="VCIs recover the contention loss: crossover vs Fig 5",
+)
+
+FIG7 = SweepSpec(
+    name="fig7_aggregation",
+    runner="oneshot",
+    grid={"approach": ("pt2pt_single", "part"),
+          "aggr_bytes": (0, 2048, 16384)},
+    fixed={"n_threads": 4, "theta": 32, "part_bytes": 64, "n_vcis": 1},
+    smoke={"approach": ("pt2pt_single", "part"), "aggr_bytes": (0, 16384)},
+    baseline_approach="pt2pt_single",
+    note="message aggregation under MPIR_CVAR_PART_AGGR_SIZE",
+)
+
+FIG8 = SweepSpec(
+    name="fig8_earlybird",
+    runner="oneshot",
+    grid={"approach": ("pt2pt_single", "part"),
+          "gamma": (25.0, 50.0, 100.0, 250.0),
+          "part_bytes": (1 << 20, 4 << 20)},
+    fixed={"n_threads": 4, "theta": 1},
+    smoke={"approach": ("pt2pt_single", "part"), "gamma": (100.0,),
+           "part_bytes": (4 << 20,)},
+    baseline_approach="pt2pt_single",
+    note="early-bird overlap of a gamma-delayed last partition",
+)
+
+STEADY = SweepSpec(
+    name="steady_state",
+    runner="steady",
+    grid={"approach": _CONTENTION_APPROACHES, "n_iters": (1, 16, 64)},
+    fixed={"n_threads": 4, "theta": 8, "part_bytes": 8192, "n_vcis": 4,
+           "aggr_bytes": 16384},
+    smoke={"approach": ("pt2pt_single", "part"), "n_iters": (64,)},
+    note="persistent-request amortization over iterations",
+)
+
+HALO1D = SweepSpec(
+    name="halo1d",
+    runner="halo",
+    grid={"approach": _CONTENTION_APPROACHES, "n_ranks": (2, 4, 8, 16)},
+    fixed={"theta": 4, "part_bytes": 4 << 20, "gamma": 250.0, "n_vcis": 2,
+           "n_threads": 1},
+    smoke={"approach": ("pt2pt_single", "part"), "n_ranks": (4,)},
+    baseline_approach="pt2pt_single",
+    note="1-D ring halo with a gamma-delayed boundary partition",
+)
+
+STENCIL3D = SweepSpec(
+    name="stencil3d",
+    runner="stencil",
+    grid={"approach": _CONTENTION_APPROACHES,
+          "dims": ((2, 2, 2), (4, 2, 2))},
+    fixed={"local_shape": (256, 64, 4), "bytes_per_cell": 8.0, "theta": 4,
+           "n_threads": 1, "n_vcis": 2},
+    smoke={"approach": ("pt2pt_single", "part"), "dims": ((2, 2, 2),)},
+    baseline_approach="pt2pt_single",
+    note="3-D torus, anisotropic block: face sizes 2 KiB / 8 KiB / 128 KiB"
+         " span the eager/bcopy/rendezvous protocols",
+)
+
+IMBALANCE = SweepSpec(
+    name="imbalance",
+    runner="imbalance",
+    grid={"approach": ("pt2pt_single", "part"),
+          "workload": ("fft", "stencil"), "theta": (4, 8)},
+    fixed={"n_ranks": 8, "n_threads": 4, "part_bytes": 1 << 20, "seed": 0,
+           "n_vcis": 2},
+    smoke={"approach": ("pt2pt_single", "part"), "workload": ("stencil",),
+           "theta": (4,)},
+    baseline_approach="pt2pt_single",
+    note="per-rank compute noise from the Appendix-A (eps, delta) model",
+)
+
+SPECS: Dict[str, SweepSpec] = {
+    s.name: s for s in (FIG4, FIG5, FIG6, FIG7, FIG8, STEADY, HALO1D,
+                        STENCIL3D, IMBALANCE)
+}
+
+
+def contention_crossover(results: Mapping[str, Mapping[str, Mapping[str, float]]]
+                         ) -> Dict[str, Dict[str, float]]:
+    """Fig-5/Fig-6 crossover ratios from a results document.
+
+    For each contended approach, the slowdown vs ``pt2pt_single`` at the
+    smallest and largest VCI count present in the ``fig6_vci`` records:
+    the paper's headline is >= ~10x at 1 VCI collapsing to ~1x (many) /
+    a few x (part) at 32 VCIs.
+    """
+    recs = results.get("fig6_vci", {})
+    by_vci: Dict[int, Dict[str, float]] = {}
+    for key, metrics in recs.items():
+        p = parse_key(key)
+        by_vci.setdefault(int(p["n_vcis"]), {})[p["approach"]] = \
+            metrics["time_us"]
+    if not by_vci:
+        return {}
+    lo, hi = min(by_vci), max(by_vci)
+    out: Dict[str, Dict[str, float]] = {}
+    for ap in ("part", "pt2pt_many"):
+        if ap in by_vci[lo] and ap in by_vci[hi]:
+            out[ap] = {
+                f"slowdown_at_{lo}_vcis":
+                    by_vci[lo][ap] / by_vci[lo]["pt2pt_single"],
+                f"slowdown_at_{hi}_vcis":
+                    by_vci[hi][ap] / by_vci[hi]["pt2pt_single"],
+            }
+    return out

@@ -1,0 +1,138 @@
+"""Golden-baseline regression suite: the committed ``BENCH_scenarios.json``
+must stay reproducible by the sweep engine within its recorded
+tolerances.
+
+Tier-1 keeps this cheap: structural checks plus a 2-point smoke per spec
+(first and last smoke-grid records).  The full-grid re-run is marked
+``slow`` (CI runs the smoke diff separately via ``benchmarks.sweep
+--smoke --check``).  Regenerate the baseline after an intentional
+calibration change with ``python -m benchmarks.sweep --update
+BENCH_scenarios.json``.
+"""
+
+import json
+import pathlib
+
+import pytest
+
+from repro.experiments import (BASELINE_VERSION, SPECS, compare_to_baseline,
+                               contention_crossover, record_key, run_spec,
+                               run_specs)
+
+BASELINE_PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_scenarios.json"
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    assert BASELINE_PATH.exists(), (
+        "BENCH_scenarios.json missing; regenerate with"
+        " python -m benchmarks.sweep --update BENCH_scenarios.json")
+    return json.loads(BASELINE_PATH.read_text())
+
+
+class TestBaselineDocument:
+    def test_version_and_spec_coverage(self, baseline):
+        assert baseline["version"] == BASELINE_VERSION
+        assert set(baseline["specs"]) == set(SPECS)
+
+    def test_full_grid_keys_match_baseline(self, baseline):
+        """Every current full-grid point has a record and vice versa —
+        spec edits must come with a baseline regeneration."""
+        for name, spec in SPECS.items():
+            want = {record_key(p) for p in spec.points("full")}
+            have = set(baseline["specs"][name]["records"])
+            assert have == want, f"{name}: baseline records out of date"
+
+    def test_smoke_grids_are_subsets_of_full(self):
+        for name, spec in SPECS.items():
+            full = {record_key(p) for p in spec.points("full")}
+            smoke = {record_key(p) for p in spec.points("smoke")}
+            assert smoke <= full, f"{name}: smoke point not in full grid"
+            assert smoke, f"{name}: empty smoke grid"
+
+    def test_message_counts_are_exact(self, baseline):
+        for name, bspec in baseline["specs"].items():
+            assert bspec["tolerances"].get("n_messages") == 0.0, name
+
+
+class TestTwoPointSmoke:
+    """Tier-1: re-run each spec's (tiny) smoke grid — the whole grid is
+    needed so derived gain metrics have their baseline-approach partner —
+    and diff two records per spec against the committed baseline."""
+
+    @pytest.mark.parametrize("name", sorted(SPECS))
+    def test_spec_reproduces_baseline(self, name, baseline):
+        spec = SPECS[name]
+        results = run_spec(spec, mode="smoke")
+        keys = sorted(record_key(p) for p in spec.points("smoke"))
+        picked = {keys[0], keys[-1]}
+        subset = {k: m for k, m in results.items() if k in picked}
+        violations = compare_to_baseline(baseline, {name: subset})
+        assert not violations, "\n".join(violations)
+
+
+class TestContentionCrossover:
+    """Acceptance: the Fig-5/Fig-6 crossover — part/many collapse vs
+    single on one VCI and recover with 32 VCIs."""
+
+    def test_smoke_reproduces_crossover(self):
+        ratios = contention_crossover(
+            {"fig6_vci": run_spec(SPECS["fig6_vci"], mode="smoke")})
+        for ap in ("part", "pt2pt_many"):
+            assert ratios[ap]["slowdown_at_1_vcis"] > 10.0
+        assert ratios["pt2pt_many"]["slowdown_at_32_vcis"] < 1.5
+        assert ratios["part"]["slowdown_at_32_vcis"] < 6.0
+        # the crossover itself: VCIs recover an order of magnitude
+        for ap in ("part", "pt2pt_many"):
+            assert (ratios[ap]["slowdown_at_1_vcis"]
+                    / ratios[ap]["slowdown_at_32_vcis"]) > 10.0
+
+    def test_stencil_smoke_has_8_ranks_and_spread_faces(self):
+        results = run_spec(SPECS["stencil3d"], mode="smoke")
+        for key, metrics in results.items():
+            assert "dims=2x2x2" in key
+            assert metrics["face_bytes_max"] / metrics["face_bytes_min"] \
+                >= 10.0
+
+
+class TestSweepCliPartialUpdate:
+    """`--update` with `--specs` must merge into the existing baseline,
+    not rewrite it with only the selected specs' records."""
+
+    @staticmethod
+    def _sweep(*argv):
+        import os
+        import subprocess
+        import sys
+        root = BASELINE_PATH.parent
+        env = dict(os.environ)
+        env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+        return subprocess.run(
+            [sys.executable, "-m", "benchmarks.sweep", *argv],
+            cwd=root, env=env, capture_output=True, text=True)
+
+    def test_partial_update_keeps_other_specs(self, tmp_path):
+        import shutil
+        path = tmp_path / "baseline.json"
+        shutil.copyfile(BASELINE_PATH, path)
+        proc = self._sweep("--specs", "fig7_aggregation",
+                           "--update", str(path))
+        assert proc.returncode == 0, proc.stderr
+        doc = json.loads(path.read_text())
+        assert set(doc["specs"]) == set(SPECS)
+
+    def test_partial_update_refuses_without_existing_baseline(self, tmp_path):
+        proc = self._sweep("--specs", "fig7_aggregation",
+                           "--update", str(tmp_path / "missing.json"))
+        assert proc.returncode == 2
+        assert "full --update" in proc.stderr
+        assert not (tmp_path / "missing.json").exists()
+
+
+@pytest.mark.slow
+class TestFullGrid:
+    def test_full_grid_reproduces_baseline(self, baseline):
+        results = run_specs(list(SPECS.values()), mode="full")
+        violations = compare_to_baseline(baseline, results)
+        assert not violations, "\n".join(violations)

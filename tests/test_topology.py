@@ -1,0 +1,180 @@
+"""Property tests for the Cartesian topology layer and its wiring into
+the stencil scenario: neighbor relations are symmetric, every flow runs
+over an existing neighbor link, and per-rank wire-message counts match
+the per-dimension CommPlan totals for arbitrary grid shapes and partition
+counts."""
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # env without hypothesis: deterministic fallback
+    from _hypo import given, settings, st
+
+from repro.core import simulator as sim
+from repro.core.commplan import plan_uniform
+from repro.core.topology import CartTopology, HaloSpec, Neighbor
+
+GRIDS = [(2,), (5,), (2, 2), (3, 4), (2, 2, 2), (4, 2, 2), (3, 1, 2),
+         (2, 3, 2)]
+# Local block per dimensionality: anisotropic so faces differ widely.
+LOCALS = {1: (4096,), 2: (1024, 16), 3: (256, 64, 4)}
+
+
+class TestCartTopology:
+    def test_create_validates(self):
+        with pytest.raises(ValueError):
+            CartTopology.create(())
+        with pytest.raises(ValueError):
+            CartTopology.create((4, 0))
+        with pytest.raises(ValueError):
+            CartTopology.create((4, 4), periodic=(True,))
+
+    def test_c_order_coords(self):
+        t = CartTopology.create((2, 3))
+        assert [t.coords(r) for r in range(6)] == [
+            (0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2)]
+
+    @given(dims=st.sampled_from(GRIDS), periodic=st.booleans())
+    @settings(max_examples=24, deadline=None)
+    def test_coords_rank_roundtrip(self, dims, periodic):
+        t = CartTopology.create(dims, periodic)
+        for r in range(t.n_ranks):
+            assert t.rank_of(t.coords(r)) == r
+
+    @given(dims=st.sampled_from(GRIDS), periodic=st.booleans())
+    @settings(max_examples=24, deadline=None)
+    def test_neighbor_relation_is_symmetric(self, dims, periodic):
+        t = CartTopology.create(dims, periodic)
+        for r in range(t.n_ranks):
+            for nb in t.neighbors(r):
+                mirror = Neighbor(r, nb.dim, -nb.direction)
+                assert mirror in t.neighbors(nb.rank), (r, nb)
+
+    @given(dims=st.sampled_from(GRIDS), periodic=st.booleans())
+    @settings(max_examples=24, deadline=None)
+    def test_every_flow_is_a_neighbor_link(self, dims, periodic):
+        t = CartTopology.create(dims, periodic)
+        flows = t.flows()
+        assert len(flows) == sum(len(t.neighbors(r))
+                                 for r in range(t.n_ranks))
+        for f in flows:
+            assert f.src != f.dst
+            assert Neighbor(f.dst, f.dim, f.direction) in t.neighbors(f.src)
+
+    def test_periodic_flow_count_excludes_size1_dims(self):
+        # torus: 2 directed flows per rank per dimension of size >= 2
+        t = CartTopology.create((3, 1, 2), periodic=True)
+        assert len(t.flows()) == t.n_ranks * 2 * 2
+
+    def test_open_boundary_counts(self):
+        t = CartTopology.create((3, 4), periodic=False)
+        corner = t.rank_of((0, 0))
+        interior = t.rank_of((1, 1))
+        assert len(t.neighbors(corner)) == 2
+        assert len(t.neighbors(interior)) == 4
+        assert t.shift(corner, 0, -1) is None
+
+    def test_size2_periodic_dim_has_two_faces_to_same_rank(self):
+        t = CartTopology.create((2,), periodic=True)
+        assert [nb.rank for nb in t.neighbors(0)] == [1, 1]
+
+
+class TestHaloSpec:
+    def test_anisotropic_face_bytes(self):
+        t = CartTopology.create((2, 2, 2))
+        spec = HaloSpec.create(t, (256, 64, 4), bytes_per_cell=8.0)
+        assert spec.all_face_bytes() == (2048.0, 8192.0, 131072.0)
+
+    def test_halo_width_scales_faces(self):
+        t = CartTopology.create((2, 2))
+        s1 = HaloSpec.create(t, (64, 16), halo_width=1)
+        s2 = HaloSpec.create(t, (64, 16), halo_width=2)
+        assert s2.face_bytes(0) == 2 * s1.face_bytes(0)
+
+    def test_face_plan_is_a_commplan(self):
+        t = CartTopology.create((2, 2))
+        spec = HaloSpec.create(t, (64, 16), bytes_per_cell=8.0)
+        plan = spec.face_plan(1, n_parts=4, aggr_bytes=0.0)
+        assert plan.n_messages == 4
+        assert plan.total_bytes == pytest.approx(spec.face_bytes(1))
+        # aggregation bound merges partitions per the commplan contract
+        merged = spec.face_plan(1, n_parts=4,
+                                aggr_bytes=spec.face_bytes(1))
+        assert merged.n_messages == 1
+
+    def test_create_validates(self):
+        t = CartTopology.create((2, 2))
+        with pytest.raises(ValueError):
+            HaloSpec.create(t, (64,))
+        with pytest.raises(ValueError):
+            HaloSpec.create(t, (64, 0))
+
+
+class TestStencilScenario:
+    @given(dims=st.sampled_from([g for g in GRIDS if len(g) > 1]),
+           theta=st.sampled_from([1, 2, 4]),
+           aggr=st.sampled_from([0.0, 4096.0]))
+    @settings(max_examples=20, deadline=None)
+    def test_per_rank_message_counts_match_commplan(self, dims, theta, aggr):
+        t = CartTopology.create(dims, periodic=True)
+        local = LOCALS[len(dims)]
+        spec = HaloSpec.create(t, local)
+        r = sim.simulate_stencil("part", topo=t, theta=theta,
+                                 local_shape=local, aggr_bytes=aggr)
+        for rank in range(t.n_ranks):
+            expect = sum(
+                spec.face_plan(nb.dim, n_parts=theta,
+                               aggr_bytes=aggr).n_messages
+                for nb in t.neighbors(rank))
+            assert r.sent_per_rank[rank] == expect
+        assert r.n_messages == sum(r.sent_per_rank)
+
+    @given(dims=st.sampled_from([g for g in GRIDS if len(g) > 1]),
+           ap=st.sampled_from(list(sim.APPROACHES)))
+    @settings(max_examples=24, deadline=None)
+    def test_all_approaches_run(self, dims, ap):
+        r = sim.simulate_stencil(ap, dims=dims, theta=2,
+                                 local_shape=LOCALS[len(dims)])
+        assert np.isfinite(r.time_s) and r.time_s > 0
+        assert len(r.rank_tts_s) == CartTopology.create(dims).n_ranks
+
+    def test_periodic_torus_is_symmetric(self):
+        r = sim.simulate_stencil("part", dims=(3, 3), theta=2,
+                                 local_shape=(64, 16))
+        assert max(r.rank_tts_s) == pytest.approx(min(r.rank_tts_s),
+                                                  rel=1e-9)
+
+    def test_matches_simulate_halo_in_1d(self):
+        theta, part_bytes = 4, 1 << 16
+        h = sim.simulate_halo("part", n_ranks=6, theta=theta,
+                              part_bytes=part_bytes, n_vcis=2)
+        s = sim.simulate_stencil("part", dims=(6,), theta=theta,
+                                 face_bytes=(theta * part_bytes,), n_vcis=2)
+        assert s.time_s == pytest.approx(h.time_s, rel=1e-12)
+        assert s.n_messages == h.n_messages
+
+    def test_anisotropic_faces_reach_the_wire(self):
+        """Bulk per-face messages must span the per-dimension sizes."""
+        r = sim.simulate_stencil("pt2pt_single", dims=(2, 2, 2), theta=4,
+                                 local_shape=(256, 64, 4))
+        assert min(r.face_bytes) == 2048.0
+        assert max(r.face_bytes) == 131072.0
+        assert max(r.face_bytes) / min(r.face_bytes) == 64.0
+
+    def test_needs_two_ranks(self):
+        with pytest.raises(ValueError):
+            sim.simulate_stencil("part", dims=(1, 1), theta=1,
+                                 local_shape=(4, 4))
+
+    def test_needs_payload_spec(self):
+        with pytest.raises(ValueError):
+            sim.simulate_stencil("part", dims=(2, 2), theta=1)
+
+    def test_as_dict_is_json_ready(self):
+        import json
+        d = sim.simulate_stencil("part", dims=(2, 2), theta=2,
+                                 local_shape=(64, 16)).as_dict()
+        json.dumps(d)
+        assert d["scenario"] == "stencil"
+        assert len(d["face_bytes"]) == 2

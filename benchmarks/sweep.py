@@ -4,13 +4,35 @@
   python -m benchmarks.sweep --full --jobs 4          # full grids, 4 procs
   python -m benchmarks.sweep --smoke --check BENCH_scenarios.json
   python -m benchmarks.sweep --update BENCH_scenarios.json   # regenerate
+  python -m benchmarks.sweep --full --engine reference       # scalar oracle
+  python -m benchmarks.sweep --full --cache .sweep_cache.json  # reuse runs
+  python -m benchmarks.sweep --bench-engine --smoke \\
+      --bench-check BENCH_engine.json                 # throughput gate (CI)
+  python -m benchmarks.sweep --bench-engine --full \\
+      --bench-out BENCH_engine.json                   # regenerate throughput
+  python -m benchmarks.sweep --profile --specs weak_scaling  # cProfile top-N
 
 ``--check`` diffs the fresh results against a committed golden baseline
 and exits non-zero on any out-of-tolerance metric; ``--update`` runs the
 full grids and rewrites the baseline document.  ``--out`` dumps the raw
-results as JSON (CI uploads it as an artifact).  The Fig-5/Fig-6
-contention crossover (part/many ~ single at 32 VCIs, >> single at 1 VCI)
-is printed whenever the fig6 spec ran.
+results as JSON (CI uploads it as an artifact).  ``--engine`` selects the
+fabric implementation (vectorized by default; ``reference`` is the scalar
+oracle) — both must reproduce the same baseline.  ``--cache`` names an
+opt-in persistent JSON run cache (keyed by engine + runner + record key +
+baseline version), so repeated ``--check`` runs after unrelated edits
+re-run nothing.
+
+``--bench-engine`` measures engine throughput instead of checking
+records (it cannot be combined with the record-checking flags): per spec
+and per engine it reports wall time and events/sec (wire messages
+simulated per second of engine wall time) and writes the document to
+``--bench-out`` when given.  ``--bench-check`` gates against a committed
+``BENCH_engine.json``: the compared quantity is each spec's
+vector-vs-reference speedup — both engines are measured in the same run
+on the same machine, so the ratio is hardware-independent — and a >2x
+relative slowdown fails.  The Fig-5/Fig-6 contention crossover (part/many
+~ single at 32 VCIs, >> single at 1 VCI) is printed whenever the fig6
+spec ran.
 """
 
 from __future__ import annotations
@@ -18,10 +40,23 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import time
 
 from repro.experiments import (SPECS, compare_to_baseline,
-                               contention_crossover, make_baseline,
-                               run_specs)
+                               contention_crossover, load_disk_cache,
+                               make_baseline, run_spec, run_specs,
+                               save_disk_cache)
+from repro.experiments import engine as _engine_mod
+
+BENCH_ENGINES = ("vector", "reference")
+BENCH_VERSION = 1
+# Grids below this many simulated wire messages finish in a handful of
+# milliseconds, where the vector/reference ratio is timer noise (and the
+# adaptive routing sends them down the scalar path anyway, pinning the
+# true ratio near 1x) — the regression gate only considers specs wide
+# enough for the staged scans to matter.
+BENCH_MIN_EVENTS = 5000
+BENCH_REGRESSION_FACTOR = 2.0
 
 
 def _parse_args(argv):
@@ -36,42 +71,223 @@ def _parse_args(argv):
                     help="comma-separated spec names (default: all)")
     ap.add_argument("--jobs", type=int, default=1,
                     help="process-pool width for scenario runs")
+    ap.add_argument("--engine", default="vector",
+                    choices=("vector", "reference"),
+                    help="fabric engine (vector = batched, reference ="
+                         " scalar oracle)")
+    ap.add_argument("--cache", default="",
+                    help="persistent JSON run cache: load before running,"
+                         " save after (opt-in)")
     ap.add_argument("--out", default="",
                     help="write raw results JSON to this path")
     ap.add_argument("--check", default="",
                     help="baseline JSON to diff against (exit 1 on drift)")
     ap.add_argument("--update", default="",
                     help="run full grids and (re)write this baseline JSON")
+    ap.add_argument("--bench-engine", action="store_true",
+                    help="measure engine throughput (events/sec + wall time"
+                         " per spec, both engines) instead of records")
+    ap.add_argument("--bench-out", default="",
+                    help="write the throughput document to this path"
+                         " (omit to measure/check without writing)")
+    ap.add_argument("--bench-check", default="",
+                    help="committed BENCH_engine.json to gate against"
+                         " (exit 1 on >2x events/sec regression)")
+    ap.add_argument("--profile", action="store_true",
+                    help="run the selected specs under cProfile and print"
+                         " the hottest functions")
+    ap.add_argument("--profile-top", type=int, default=20,
+                    help="rows of cProfile output with --profile")
     return ap.parse_args(argv)
 
 
-def main(argv=None) -> int:
-    args = _parse_args(argv)
-    mode = "full" if (args.full or args.update) else "smoke"
+def _select_specs(args):
     if args.specs:
         names = [n.strip() for n in args.specs.split(",") if n.strip()]
         unknown = [n for n in names if n not in SPECS]
         if unknown:
             print(f"unknown specs {unknown}; have {sorted(SPECS)}",
                   file=sys.stderr)
-            return 2
-        specs = [SPECS[n] for n in names]
-    else:
-        specs = list(SPECS.values())
+            return None
+        return [SPECS[n] for n in names]
+    return list(SPECS.values())
 
-    results = run_specs(specs, mode=mode, jobs=args.jobs)
+
+def _bench_entry(spec, mode: str, engine: str, repeats: int = 3) -> dict:
+    """Measure one (spec, engine, mode) cell: wall time + events/sec.
+
+    Best of ``repeats`` uncached runs — scheduler noise only ever slows
+    a run down, so the minimum is the stable estimator the 2x regression
+    gate needs.
+    """
+    wall = float("inf")
+    for _ in range(repeats):
+        _engine_mod._CACHE.clear()  # measure real runs, not cache hits
+        t0 = time.perf_counter()
+        records = run_spec(spec, mode=mode, engine=engine)
+        wall = min(wall, time.perf_counter() - t0)
+    events = sum(m.get("n_messages", 0.0) for m in records.values())
+    return {
+        "spec": spec.name, "engine": engine, "mode": mode,
+        "records": len(records), "events": int(events),
+        "wall_s": wall,
+        "events_per_sec": events / wall if wall > 0 else 0.0,
+    }
+
+
+def run_bench_engine(specs, mode: str) -> dict:
+    """Throughput document: every (spec, engine) cell.
+
+    Smoke runs measure the smoke grids only (the CI gate); full runs
+    measure both modes so the committed document carries reference
+    entries for either kind of later check.  Totals (and the printed
+    speedup) are over the full-grid entries when present.
+    """
+    modes = ("smoke",) if mode == "smoke" else ("smoke", "full")
+    entries = []
+    for m in modes:
+        for engine in BENCH_ENGINES:
+            for spec in specs:
+                e = _bench_entry(spec, m, engine)
+                entries.append(e)
+                print(f"# bench {e['spec']:18s} {engine:9s} {m:5s} "
+                      f"{e['wall_s'] * 1e3:9.1f} ms  {e['events']:8d} events"
+                      f"  {e['events_per_sec'] / 1e3:9.1f} kev/s")
+    totals = {}
+    total_mode = modes[-1]
+    for engine in BENCH_ENGINES:
+        es = [e for e in entries
+              if e["engine"] == engine and e["mode"] == total_mode]
+        totals[engine] = {"wall_s": sum(e["wall_s"] for e in es),
+                          "events": sum(e["events"] for e in es)}
+    if totals["vector"]["wall_s"] > 0:
+        speedup = totals["reference"]["wall_s"] / totals["vector"]["wall_s"]
+        totals["speedup_vector_vs_reference"] = speedup
+        print(f"# bench total ({total_mode}): reference"
+              f" {totals['reference']['wall_s']:.3f}s vs vector"
+              f" {totals['vector']['wall_s']:.3f}s ({speedup:.1f}x)")
+    _engine_mod._CACHE.clear()  # leave no half-measured state behind
+    return {"version": BENCH_VERSION, "mode": mode, "entries": entries,
+            "totals": totals}
+
+
+def _speedup_by_spec(doc: dict, mode: str) -> dict:
+    """Per-spec vector-vs-reference events/sec ratio for one mode."""
+    cells = {(e["spec"], e["engine"]): e for e in doc.get("entries", [])
+             if e.get("mode") == mode}
+    out = {}
+    for (spec, engine), e in cells.items():
+        ref = cells.get((spec, "reference"))
+        if engine != "vector" or ref is None \
+                or min(e["events"], ref["events"]) < BENCH_MIN_EVENTS \
+                or ref["events_per_sec"] <= 0:
+            continue
+        out[spec] = e["events_per_sec"] / ref["events_per_sec"]
+    return out
+
+
+def check_bench_regression(doc: dict, ref: dict) -> list:
+    """>2x regressions of the vector engine's per-spec speedup.
+
+    Both documents carry each spec's vector *and* reference throughput
+    measured on the same machine in the same run, so the compared
+    quantity — the vector/reference events-per-second ratio — is
+    hardware-independent: a slower CI runner slows both engines alike,
+    while a vectorized-engine code regression shows up directly.  Specs
+    under ``BENCH_MIN_EVENTS`` events are timer noise and exempt.
+    """
+    violations = []
+    for mode in ("smoke", "full"):
+        measured = _speedup_by_spec(doc, mode)
+        committed = _speedup_by_spec(ref, mode)
+        for spec, want in committed.items():
+            have = measured.get(spec)
+            if have is not None \
+                    and have * BENCH_REGRESSION_FACTOR < want:
+                violations.append(
+                    f"{spec}/{mode}: vector engine {have:.2f}x the scalar"
+                    f" oracle vs committed {want:.2f}x"
+                    f" (>{BENCH_REGRESSION_FACTOR}x relative slowdown)")
+    return violations
+
+
+def main(argv=None) -> int:
+    args = _parse_args(argv)
+    mode = "full" if (args.full or args.update) else "smoke"
+    specs = _select_specs(args)
+    if specs is None:
+        return 2
+
+    if args.bench_engine:
+        clash = [f for f in ("update", "check", "out", "cache", "profile")
+                 if getattr(args, f)]
+        if clash:
+            print("--bench-engine measures throughput only; it cannot be"
+                  f" combined with {', '.join('--' + f for f in clash)}",
+                  file=sys.stderr)
+            return 2
+        doc = run_bench_engine(specs, mode)
+        if args.bench_check:
+            try:
+                with open(args.bench_check) as f:
+                    ref = json.load(f)
+            except (FileNotFoundError, json.JSONDecodeError) as e:
+                print(f"# cannot read bench baseline {args.bench_check}:"
+                      f" {e}", file=sys.stderr)
+                return 2
+            violations = check_bench_regression(doc, ref)
+            if violations:
+                print(f"# ENGINE THROUGHPUT REGRESSION"
+                      f" ({len(violations)} violations):", file=sys.stderr)
+                for v in violations:
+                    print(f"#   {v}", file=sys.stderr)
+                return 1
+            print("# engine throughput check passed")
+        if args.bench_out:  # never overwrite a committed doc implicitly
+            with open(args.bench_out, "w") as f:
+                json.dump(doc, f, indent=2, sort_keys=True)
+                f.write("\n")
+            print(f"# throughput document written to {args.bench_out}",
+                  file=sys.stderr)
+        return 0
+
+    if args.cache:
+        n = load_disk_cache(args.cache)
+        if n:
+            print(f"# loaded {n} cached records from {args.cache}",
+                  file=sys.stderr)
+
+    profiler = None
+    if args.profile:
+        import cProfile
+        profiler = cProfile.Profile()
+        profiler.enable()
+    results = run_specs(specs, mode=mode, jobs=args.jobs,
+                        engine=args.engine)
+    if profiler is not None:
+        import pstats
+        profiler.disable()
+        stats = pstats.Stats(profiler, stream=sys.stderr)
+        stats.strip_dirs().sort_stats("cumulative")
+        print(f"# cProfile, top {args.profile_top} by cumulative time:",
+              file=sys.stderr)
+        stats.print_stats(args.profile_top)
     for name, recs in results.items():
-        print(f"# {name}: {len(recs)} records ({mode})")
+        print(f"# {name}: {len(recs)} records ({mode}, {args.engine})")
 
     cross = contention_crossover(results)
     for ap, ratios in cross.items():
         detail = ", ".join(f"{k}={v:.2f}x" for k, v in ratios.items())
         print(f"# crossover {ap} vs pt2pt_single: {detail}")
 
+    if args.cache:
+        save_disk_cache(args.cache)
+        print(f"# run cache saved to {args.cache}", file=sys.stderr)
+
     if args.out:
         with open(args.out, "w") as f:
-            json.dump({"mode": mode, "results": results}, f, indent=2,
-                      sort_keys=True)
+            json.dump({"mode": mode, "engine": args.engine,
+                       "results": results}, f, indent=2, sort_keys=True)
         print(f"# results written to {args.out}", file=sys.stderr)
 
     if args.update:

@@ -12,11 +12,35 @@
 """
 
 from . import commplan, perfmodel, simulator, topology  # noqa: F401
-from .bucketing import Bucket, BucketPlan, bucketed_apply, make_plan  # noqa: F401
 from .commplan import (CommPlan, WireMessage, channel_slices,  # noqa: F401
                        channel_streams, plan_sized, plan_uniform)
-from .earlybird import (SyncConfig, finalize_grads, make_layer_hook,  # noqa: F401
-                        value_and_synced_grad)
 from .partition import (PartitionedRequest, agree_message_count,  # noqa: F401
                         aggregate_message_count)
 from .topology import CartTopology, HaloSpec  # noqa: F401
+
+# bucketing/earlybird pull in jax (~1s import); the simulator/sweep stack
+# is pure NumPy, so those re-exports resolve lazily (PEP 562) to keep the
+# CLI entry points fast.
+_LAZY_EXPORTS = {
+    "bucketing": ("bucketing", None),
+    "earlybird": ("earlybird", None),
+    "Bucket": ("bucketing", "Bucket"),
+    "BucketPlan": ("bucketing", "BucketPlan"),
+    "bucketed_apply": ("bucketing", "bucketed_apply"),
+    "make_plan": ("bucketing", "make_plan"),
+    "SyncConfig": ("earlybird", "SyncConfig"),
+    "finalize_grads": ("earlybird", "finalize_grads"),
+    "make_layer_hook": ("earlybird", "make_layer_hook"),
+    "value_and_synced_grad": ("earlybird", "value_and_synced_grad"),
+}
+
+
+def __getattr__(name):
+    target = _LAZY_EXPORTS.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    module = importlib.import_module(f".{target[0]}", __name__)
+    value = module if target[1] is None else getattr(module, target[1])
+    globals()[name] = value  # cache: __getattr__ fires once per name
+    return value

@@ -22,9 +22,25 @@ discrete-event model whose resources mirror the MPICH/UCX stack:
 
 Architecture: each API variant is a :class:`Schedule` object registered in
 ``SCHEDULES``; :func:`simulate` looks the approach up and lets the schedule
-drive a :class:`_Fabric` — a multi-rank resource model (per-rank VCI banks
-and NICs, per-directed-link wires) so a schedule can run as one flow of a
-larger scenario.  Two scenario drivers build on the same engine:
+drive a fabric (:mod:`repro.core.fabric`) — a multi-rank resource model
+(per-rank VCI banks and NICs, per-directed-link wires) so a schedule can
+run as one flow of a larger scenario.  Every driver takes an ``engine``
+argument selecting the fabric implementation:
+
+  * ``engine="vector"`` (default) — the batched engine: schedules emit
+    their traffic as :class:`~repro.core.fabric.IntentBatch` structured
+    arrays, multi-flow scenarios merge all flows with one stable argsort,
+    and the fabric advances per-resource clocks with grouped array scans
+    (:meth:`~repro.core.fabric.Fabric.transmit_arrays`).  Intent batches
+    are memoized per scenario equivalence class — in a stencil every flow
+    of a given dimension shares (theta, part_bytes, ready, n_vcis), so
+    intents are built once per class and re-stamped per (src, dst).
+  * ``engine="reference"`` — the original scalar engine (one Python
+    ``transmit`` call per wire message), kept as the differential-testing
+    oracle.  The two engines agree bit-for-bit
+    (tests/test_engine_diff.py).
+
+Scenario drivers build on the same engine:
 
   * :func:`simulate_steady_state` — N iterations reusing one persistent
     request (amortized ``MPI_Psend_init``, warm VCI state);
@@ -49,52 +65,30 @@ Calibration targets (validated in tests/test_simulator.py):
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .fabric import (US, DEFAULT_NET, Fabric, IntentBatch, NetConfig,
+                     ReferenceFabric)
 from .partition import PartitionedRequest
 from .topology import CartTopology, HaloSpec
 
-US = 1e-6
+# The fabric engines selectable via the drivers' ``engine`` argument.
+ENGINES = ("vector", "reference")
+
+# Backward-compatible alias: the scalar fabric used to live here.
+_Fabric = ReferenceFabric
 
 
-@dataclass(frozen=True)
-class NetConfig:
-    """Cost constants of the simulated MPICH/UCX/IB stack."""
-    beta: float = 25e9            # wire bandwidth, B/s (200 Gb/s HDR)
-    beta_copy: float = 12e9       # host memcpy bandwidth (bcopy / AM copy)
-    alpha_wire: float = 0.80 * US  # one-way wire latency
-    alpha_first: float = 0.30 * US  # injection cost, idle VCI
-    alpha_msg: float = 0.10 * US  # marginal injection, same thread streak
-    chi_switch: float = 2.60 * US  # injection when the VCI's previous
-    #                                message came from another thread
-    alpha_nic: float = 0.03 * US  # per-message NIC serialization
-    alpha_put: float = 0.08 * US  # marginal injection for RMA put
-    alpha_put_first: float = 0.25 * US
-    alpha_atomic: float = 0.02 * US  # MPI_Pready atomic decrement (local)
-    alpha_bounce: float = 0.04 * US  # cache-line bounce on the shared
-    #                                  counter when several threads Pready
-    alpha_counter: float = 0.10 * US  # shared partitioned-request state
-    alpha_progress: float = 0.20 * US  # progress-engine cost per extra window
-    alpha_recv: float = 0.05 * US  # receiver-side completion processing
-    barrier_base: float = 0.05 * US
-    barrier_log: float = 0.15 * US
-    alpha_init: float = 25.0 * US  # one-time persistent-request / window
-    #                                setup (MPI_Psend_init, MPI_Win_create)
-    alpha_init_msg: float = 0.50 * US  # per planned wire message at init
-    eager_max: int = 1024         # short protocol  <= 1 KiB
-    bcopy_max: int = 8192         # bcopy protocol  <= 8 KiB, then rendezvous
-
-    def barrier(self, n_threads: int) -> float:
-        if n_threads <= 1:
-            return 0.0
-        return self.barrier_base + self.barrier_log * math.log2(n_threads)
-
-
-DEFAULT_NET = NetConfig()
+def _make_fabric(engine: str, cfg: NetConfig, n_vcis: int,
+                 n_ranks: int = 2):
+    if engine == "vector":
+        return Fabric(cfg, n_vcis, n_ranks=n_ranks)
+    if engine == "reference":
+        return ReferenceFabric(cfg, n_vcis, n_ranks=n_ranks)
+    raise ValueError(f"unknown engine {engine!r}; one of {ENGINES}")
 
 
 @dataclass
@@ -107,66 +101,6 @@ class SimResult:
     @property
     def time_us(self) -> float:
         return self.time_s / US
-
-
-class _Fabric:
-    """Serial-resource scheduler: per-rank V VCIs -> per-rank NIC ->
-    per-directed-link wire.
-
-    The default two-rank fabric with flow (0 -> 1) reproduces the paper's
-    Fig-3 sender/receiver pair; halo scenarios instantiate R ranks and run
-    bidirectional flows over distinct (src, dst) links.  State persists
-    across iterations: warm VCIs remember their last owner, so a thread
-    re-using its own VCI pays only the marginal injection, while a VCI
-    last driven by another thread pays the lock bounce — which can make
-    warm iterations *dearer* than the one-shot benchmark's all-idle VCIs
-    (``alpha_first``) for schedules that rotate threads over VCIs.
-    """
-
-    def __init__(self, cfg: NetConfig, n_vcis: int, n_ranks: int = 2):
-        self.cfg = cfg
-        self.n_vcis = max(1, n_vcis)
-        self.n_ranks = max(2, n_ranks)
-        self.vci_free = [[0.0] * self.n_vcis for _ in range(self.n_ranks)]
-        self.vci_last_thread: List[List[Optional[int]]] = [
-            [None] * self.n_vcis for _ in range(self.n_ranks)]
-        self.nic_free = [0.0] * self.n_ranks
-        self.wire_free: Dict[tuple, float] = {}
-        self.n_messages = 0
-        self.sent_per_rank = [0] * self.n_ranks  # wire messages injected
-
-    def _inject_cost(self, rank: int, vci: int, thread: int,
-                     put: bool) -> float:
-        cfg = self.cfg
-        last = self.vci_last_thread[rank][vci]
-        if last is None:
-            return cfg.alpha_put_first if put else cfg.alpha_first
-        if last != thread:
-            return cfg.chi_switch
-        return cfg.alpha_put if put else cfg.alpha_msg
-
-    def transmit(self, t_ready: float, nbytes: float, vci: int, thread: int,
-                 *, put: bool = False, am_copy: bool = False,
-                 src: int = 0, dst: int = 1) -> float:
-        """Schedule one message src -> dst; returns receiver arrival time."""
-        cfg = self.cfg
-        vci %= self.n_vcis
-        inject = self._inject_cost(src, vci, thread, put)
-        if am_copy or (cfg.eager_max < nbytes <= cfg.bcopy_max):
-            inject += nbytes / cfg.beta_copy  # bcopy / AM intermediate copy
-        t0 = max(t_ready, self.vci_free[src][vci])
-        t1 = t0 + inject
-        self.vci_free[src][vci] = t1
-        self.vci_last_thread[src][vci] = thread
-        t2 = max(t1, self.nic_free[src]) + cfg.alpha_nic
-        self.nic_free[src] = t2
-        if not am_copy and nbytes > cfg.bcopy_max:
-            t2 += 2.0 * cfg.alpha_wire  # rendezvous RTS/CTS round trip
-        t3 = max(t2, self.wire_free.get((src, dst), 0.0)) + nbytes / cfg.beta
-        self.wire_free[(src, dst)] = t3
-        self.n_messages += 1
-        self.sent_per_rank[src] += 1
-        return t3 + cfg.alpha_wire + cfg.alpha_recv
 
 
 @dataclass
@@ -189,6 +123,11 @@ class Scenario:
     src: int = 0
     dst: int = 1
     t0: float = 0.0
+    # Optional precomputed intent-memoization key: scenarios sharing it
+    # must produce identical intent batches (same everything but
+    # endpoints).  Drivers that know their equivalence classes (stencil:
+    # one per dimension) set it to skip hashing the ready table per flow.
+    class_key: Optional[tuple] = field(default=None, compare=False)
     _request: Optional[PartitionedRequest] = field(
         default=None, repr=False, compare=False)
 
@@ -248,12 +187,43 @@ class Schedule:
     def intents(self, sc: Scenario) -> Optional[List[Intent]]:
         return None
 
-    def finish(self, sc: Scenario, fab: _Fabric,
-               arrivals: List[float]) -> float:
+    def intent_batch(self, sc: Scenario) -> Optional[IntentBatch]:
+        """The flow's traffic as structured arrays (vectorized engine).
+
+        Defaults to columnizing :meth:`intents`; schedules whose plan is
+        itself array-shaped override this to skip the per-partition
+        Python loop entirely.  Returns None for dependent-traffic
+        schedules, which then run message-by-message via :meth:`run`.
+        """
+        ints = self.intents(sc)
+        if ints is None:
+            return None
+        return IntentBatch.from_intents(ints)
+
+    def finish(self, sc: Scenario, fab,
+               arrivals) -> float:
         """Post-traffic completion processing (e.g. barrier before Wait)."""
+        if isinstance(arrivals, np.ndarray):
+            return float(arrivals.max())
         return max(arrivals)
 
-    def run(self, sc: Scenario, fab: _Fabric) -> float:
+    def finish_batch(self, flows: Sequence[Scenario], fab,
+                     flow_max: np.ndarray) -> Optional[np.ndarray]:
+        """Vectorized :meth:`finish` over merged flows, or None.
+
+        ``flow_max[i]`` is the max arrival of flow i's messages.  The
+        default covers every schedule that doesn't override ``finish``;
+        a schedule with a custom ``finish`` either overrides this
+        consistently or returns None to fall back to per-flow calls.
+        Implementations must be pure and uniformly return None or an
+        array regardless of the flow count (the class-based fast path
+        probes with an empty flow list).
+        """
+        if type(self).finish is Schedule.finish:
+            return flow_max
+        return None
+
+    def run(self, sc: Scenario, fab) -> float:
         ints = self.intents(sc)
         if ints is None:
             raise NotImplementedError(f"{self.name} must override run()")
@@ -311,10 +281,19 @@ class PartitionedSchedule(Schedule):
                               thread=owner))
         return out
 
-    def finish(self, sc: Scenario, fab: _Fabric,
-               arrivals: List[float]) -> float:
+    def finish(self, sc: Scenario, fab, arrivals) -> float:
         # barrier before MPI_Wait
+        if isinstance(arrivals, np.ndarray):
+            return float(arrivals.max()) + sc.cfg.barrier(sc.n_threads)
         return max(arrivals) + sc.cfg.barrier(sc.n_threads)
+
+    def finish_batch(self, flows: Sequence[Scenario], fab,
+                     flow_max: np.ndarray) -> np.ndarray:
+        barriers: Dict[tuple, float] = {}
+        return flow_max + np.array(
+            [barriers.setdefault((id(sc.cfg), sc.n_threads),
+                                 sc.cfg.barrier(sc.n_threads))
+             for sc in flows])
 
     def n_requests(self, sc: Scenario) -> int:
         return sc.request().n_messages
@@ -361,6 +340,24 @@ class Pt2PtManySchedule(Schedule):
                                   vci=t % max(1, sc.n_vcis), thread=t))
                 t_free = t_issue  # issue cost accounted inside the VCI queue
         return out
+
+    def intent_batch(self, sc: Scenario) -> IntentBatch:
+        # The per-thread issue chain is a running max along theta (the
+        # issue cost is accounted inside the VCI queue), so the whole
+        # plan builds as one cummax — max is associative, so folding the
+        # ``start`` seed in afterwards is bit-identical to the loop.
+        start = sc.start
+        issue = np.maximum(
+            np.maximum.accumulate(start + sc.ready, axis=1), start)
+        n = sc.n_part
+        threads = np.arange(sc.n_threads, dtype=np.int64)
+        return IntentBatch(
+            t_ready=issue.ravel(),
+            nbytes=np.full(n, float(sc.part_bytes)),
+            vci=np.repeat(threads % max(1, sc.n_vcis), sc.theta),
+            thread=np.repeat(threads, sc.theta),
+            put=np.zeros(n, dtype=bool),
+            am_copy=np.zeros(n, dtype=bool))
 
     def n_requests(self, sc: Scenario) -> int:
         return sc.n_part
@@ -436,8 +433,24 @@ def _normalize_ready(n_threads: int, theta: int,
                      ready: Optional[Sequence]) -> np.ndarray:
     if ready is None:
         return np.zeros((n_threads, theta))
-    arr = np.asarray(ready, dtype=float).reshape(n_threads, theta)
-    return arr
+    arr = np.asarray(ready, dtype=float)
+    if arr.size != n_threads * theta:
+        raise ValueError(
+            f"ready table has shape {arr.shape} ({arr.size} entries);"
+            f" expected (n_threads, theta) = ({n_threads}, {theta})"
+            f" [{n_threads * theta} entries]")
+    return arr.reshape(n_threads, theta)
+
+
+def _run_single(sched: Schedule, sc: Scenario, fab) -> float:
+    """Run one flow on the fabric.
+
+    A single flow has one sender, so its NIC stage is one serial chain —
+    batching cannot widen it and the scalar path is always at least as
+    fast (the fabrics compute identical values either way).  Batching
+    pays off only in the multi-flow merges of :func:`_run_flows`.
+    """
+    return sched.run(sc, fab)
 
 
 def _make_scenario(*, n_threads: int, theta: int, part_bytes: float,
@@ -451,20 +464,21 @@ def _make_scenario(*, n_threads: int, theta: int, part_bytes: float,
 
 def simulate(approach: str, *, n_threads: int, theta: int, part_bytes: float,
              ready=None, n_vcis: int = 1, aggr_bytes: float = 0.0,
-             cfg: NetConfig = DEFAULT_NET) -> SimResult:
+             cfg: NetConfig = DEFAULT_NET, engine: str = "vector") -> SimResult:
     """Run one iteration of the Fig-3 benchmark for one API variant.
 
     ``ready[t, j]`` is the time partition j of thread t finishes compute
     (seconds from MPI_Start).  The returned ``time_s`` subtracts the compute
     time ``max(ready)`` — the paper's §2.1 metric.  Dispatches through the
-    ``SCHEDULES`` registry.
+    ``SCHEDULES`` registry; ``engine`` selects the batched fabric
+    (``"vector"``) or the scalar oracle (``"reference"``).
     """
     sched = _lookup(approach)
     sc = _make_scenario(n_threads=n_threads, theta=theta,
                         part_bytes=part_bytes, ready=ready, n_vcis=n_vcis,
                         aggr_bytes=aggr_bytes, cfg=cfg)
-    fab = _Fabric(cfg, n_vcis)
-    tts = sched.run(sc, fab)
+    fab = _make_fabric(engine, cfg, n_vcis)
+    tts = _run_single(sched, sc, fab)
     return SimResult(time_s=tts - sc.compute, tts_s=tts,
                      n_messages=fab.n_messages, approach=approach)
 
@@ -511,7 +525,8 @@ class SteadyStateResult:
 def simulate_steady_state(approach: str, *, n_iters: int, n_threads: int,
                           theta: int, part_bytes: float, ready=None,
                           n_vcis: int = 1, aggr_bytes: float = 0.0,
-                          cfg: NetConfig = DEFAULT_NET) -> SteadyStateResult:
+                          cfg: NetConfig = DEFAULT_NET,
+                          engine: str = "vector") -> SteadyStateResult:
     """N iterations of one flow, reusing the persistent request.
 
     Iteration 0 pays the one-time setup (``alpha_init`` plus
@@ -531,13 +546,13 @@ def simulate_steady_state(approach: str, *, n_iters: int, n_threads: int,
     sc = _make_scenario(n_threads=n_threads, theta=theta,
                         part_bytes=part_bytes, ready=ready, n_vcis=n_vcis,
                         aggr_bytes=aggr_bytes, cfg=cfg)
-    fab = _Fabric(cfg, n_vcis)
+    fab = _make_fabric(engine, cfg, n_vcis)
     setup = cfg.alpha_init + cfg.alpha_init_msg * sched.n_requests(sc)
     t = setup
     iter_times = []
     for _ in range(n_iters):
         sc.t0 = t
-        tts = sched.run(sc, fab)
+        tts = _run_single(sched, sc, fab)
         iter_times.append(tts - t - sc.compute)
         t = tts
     return SteadyStateResult(approach=approach, n_iters=n_iters,
@@ -573,9 +588,9 @@ class HaloResult:
         }
 
 
-def _run_flows(sched: Schedule, fab: _Fabric,
-               scenarios: Sequence[Scenario]) -> List[List[float]]:
-    """Run many flows of one schedule on a shared fabric.
+def _run_flows_reference(sched: Schedule, fab: ReferenceFabric,
+                         scenarios: Sequence[Scenario]) -> List[List[float]]:
+    """Scalar-oracle multi-flow merge: one transmit call per message.
 
     Pipelinable flows merge their intents in global time order so
     concurrent flows interleave on shared VCIs/NICs/links instead of
@@ -608,11 +623,158 @@ def _run_flows(sched: Schedule, fab: _Fabric,
     return incoming
 
 
+def _scenario_class_key(sc: Scenario) -> tuple:
+    """Scenario equivalence class for intent memoization.
+
+    Intents depend on everything about a flow *except* its (src, dst)
+    endpoints — flows sharing this key (e.g. every stencil flow of one
+    dimension) reuse one intent batch, re-stamped per endpoint pair.
+    Drivers that know their classes up front set ``Scenario.class_key``;
+    the fallback hashes the full parameter tuple (ready table included).
+    """
+    if sc.class_key is not None:
+        return sc.class_key
+    return (sc.n_threads, sc.theta, sc.part_bytes, sc.n_vcis,
+            sc.aggr_bytes, sc.t0, id(sc.cfg), sc.ready.tobytes())
+
+
+def _merge_transmit(sched: Schedule, fab: Fabric,
+                    flows: Sequence[Scenario], lens: np.ndarray,
+                    t_ready: np.ndarray, nbytes: np.ndarray, vci: np.ndarray,
+                    thread: np.ndarray, put: np.ndarray, am_copy: np.ndarray,
+                    src: np.ndarray, dst: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The shared merge pipeline behind both batched flow paths.
+
+    Takes per-message columns in flow-major order plus per-flow lengths;
+    merges all flows in global time order (stable sort by t_ready — the
+    identical order, tie-breaks included, to the scalar event loop),
+    runs the fabric once, and computes per-flow finish times.  Returns
+    ``(finished, arrivals, starts)`` with arrivals back in flow-major
+    order.  This is the single bit-for-bit-critical copy of the merge:
+    ordering or finish fixes land here for every caller.
+    """
+    order = np.argsort(t_ready, kind="stable")
+    arr = fab.transmit_arrays(t_ready[order], nbytes[order], vci[order],
+                              thread[order], put[order], am_copy[order],
+                              src[order], dst[order])
+    arrivals = np.empty_like(arr)
+    arrivals[order] = arr
+    starts = np.zeros(len(flows), dtype=np.int64)
+    np.cumsum(lens[:-1], out=starts[1:])
+    flow_max = np.maximum.reduceat(arrivals, starts)
+    finished = sched.finish_batch(flows, fab, flow_max)
+    if finished is None:  # custom finish: per-flow calls on slices
+        finished = np.array(
+            [sched.finish(sc, fab, arrivals[o:o + ln])
+             for sc, o, ln in zip(flows, starts.tolist(), lens.tolist())])
+    return finished, arrivals, starts
+
+
+def _run_flows_vector(sched: Schedule, fab: Fabric,
+                      scenarios: Sequence[Scenario]) -> List[List[float]]:
+    """Batched multi-flow merge: memoized intent batches, one stable
+    argsort over all flows, one grouped-scan pass through the fabric.
+
+    Equivalent to :func:`_run_flows_reference` bit-for-bit: dependent
+    -traffic flows still run whole first (scalar transmits on the shared
+    array state), and the merged batch is processed in the identical
+    global order (stable sort by t_ready over flow-major enumeration).
+    """
+    incoming: List[List[float]] = [[] for _ in range(fab.n_ranks)]
+    flows: List[Scenario] = []
+    batches: List[IntentBatch] = []
+    memo: Dict[tuple, Optional[IntentBatch]] = {}
+    for sc in scenarios:
+        key = _scenario_class_key(sc)
+        if key not in memo:
+            memo[key] = sched.intent_batch(sc)
+        batch = memo[key]
+        if batch is None:
+            incoming[sc.dst].append(sched.run(sc, fab))
+        else:
+            flows.append(sc)
+            batches.append(batch)
+    if flows:
+        lens = np.array([len(b) for b in batches], dtype=np.int64)
+        finished, _, _ = _merge_transmit(
+            sched, fab, flows, lens,
+            np.concatenate([b.t_ready for b in batches]),
+            np.concatenate([b.nbytes for b in batches]),
+            np.concatenate([b.vci for b in batches]),
+            np.concatenate([b.thread for b in batches]),
+            np.concatenate([b.put for b in batches]),
+            np.concatenate([b.am_copy for b in batches]),
+            np.repeat(np.array([sc.src for sc in flows], dtype=np.int64),
+                      lens),
+            np.repeat(np.array([sc.dst for sc in flows], dtype=np.int64),
+                      lens))
+        for sc, t in zip(flows, finished.tolist()):
+            incoming[sc.dst].append(t)
+    return incoming
+
+
+def _run_flows(sched: Schedule, fab,
+               scenarios: Sequence[Scenario]) -> List[List[float]]:
+    """Run many flows of one schedule on a shared fabric (engine dispatch)."""
+    if isinstance(fab, Fabric):
+        return _run_flows_vector(sched, fab, scenarios)
+    return _run_flows_reference(sched, fab, scenarios)
+
+
+def _run_flows_classes(sched: Schedule, fab: Fabric,
+                       templates: Sequence[Scenario],
+                       class_idx: np.ndarray, srcs: np.ndarray,
+                       dsts: np.ndarray) -> Optional[np.ndarray]:
+    """Class-based fast path for many flows drawn from few intent classes.
+
+    ``class_idx[i]`` names the template scenario flow i is an endpoint
+    re-stamp of.  Intent batches are built once per class; the merged
+    columns are assembled by vectorized gathers instead of per-flow
+    Python objects, so a 512-rank stencil (3072 flows) costs a handful
+    of array ops on top of the fabric scan.  Returns per-rank completion
+    times, or None when the schedule has dependent traffic (the caller
+    then takes the generic per-scenario path).  Bit-for-bit equal to
+    :func:`_run_flows_reference`: same concatenation order, same stable
+    merge, same finish arithmetic.
+    """
+    if sched.finish_batch([], fab, np.empty(0)) is None:
+        return None  # custom per-flow finish: needs real endpoint pairs
+    batches = [sched.intent_batch(t) for t in templates]
+    if any(b is None for b in batches):
+        return None
+    class_len = np.array([len(b) for b in batches], dtype=np.int64)
+    class_ofs = np.zeros(len(batches), dtype=np.int64)
+    np.cumsum(class_len[:-1], out=class_ofs[1:])
+    lens = class_len[class_idx]
+    n = int(lens.sum())
+    flow_starts = np.zeros(len(class_idx), dtype=np.int64)
+    np.cumsum(lens[:-1], out=flow_starts[1:])
+    # gather[i] = row of the stacked class columns feeding message i of
+    # the flow-major concatenation (what per-flow np.concatenate built)
+    gather = (np.repeat(class_ofs[class_idx] - flow_starts, lens)
+              + np.arange(n, dtype=np.int64))
+    flows = [templates[c] for c in class_idx.tolist()]
+    finished, _, _ = _merge_transmit(
+        sched, fab, flows, lens,
+        np.concatenate([b.t_ready for b in batches])[gather],
+        np.concatenate([b.nbytes for b in batches])[gather],
+        np.concatenate([b.vci for b in batches])[gather],
+        np.concatenate([b.thread for b in batches])[gather],
+        np.concatenate([b.put for b in batches])[gather],
+        np.concatenate([b.am_copy for b in batches])[gather],
+        np.repeat(srcs, lens), np.repeat(dsts, lens))
+    rank_tts = np.zeros(fab.n_ranks)
+    np.maximum.at(rank_tts, dsts, finished)
+    return rank_tts
+
+
 def simulate_halo(approach: str, *, n_ranks: int, theta: int,
                   part_bytes: float, n_threads: int = 1, ready=None,
                   n_vcis: int = 1, aggr_bytes: float = 0.0,
                   periodic: bool = True,
-                  cfg: NetConfig = DEFAULT_NET) -> HaloResult:
+                  cfg: NetConfig = DEFAULT_NET,
+                  engine: str = "vector") -> HaloResult:
     """1-D stencil halo exchange: every rank sends its theta boundary
     partitions to each neighbor and completes when both halos arrive.
 
@@ -628,7 +790,7 @@ def simulate_halo(approach: str, *, n_ranks: int, theta: int,
         raise ValueError("halo exchange needs at least 2 ranks")
     sched = _lookup(approach)
     topo = CartTopology.create((n_ranks,), periodic)
-    fab = _Fabric(cfg, n_vcis, n_ranks=n_ranks)
+    fab = _make_fabric(engine, cfg, n_vcis, n_ranks=n_ranks)
     ready_arr = _normalize_ready(n_threads, theta, ready)
     compute = float(ready_arr.max())
     scenarios = [Scenario(n_threads=n_threads, theta=theta,
@@ -692,6 +854,12 @@ def _normalize_rank_ready(n_ranks: int, n_threads: int, theta: int,
     if arr.size == n_threads * theta:
         return np.broadcast_to(arr.reshape(n_threads, theta),
                                (n_ranks, n_threads, theta))
+    if arr.size != n_ranks * n_threads * theta:
+        raise ValueError(
+            f"per-rank ready table has shape {arr.shape} ({arr.size}"
+            f" entries); expected (n_ranks, n_threads, theta) ="
+            f" ({n_ranks}, {n_threads}, {theta}) or a shared"
+            f" (n_threads, theta) = ({n_threads}, {theta}) table")
     return arr.reshape(n_ranks, n_threads, theta)
 
 
@@ -702,7 +870,8 @@ def simulate_stencil(approach: str, *, dims: Sequence[int] = (),
                      bytes_per_cell: float = 8.0, halo_width: int = 1,
                      face_bytes: Optional[Sequence[float]] = None,
                      ready=None, n_vcis: int = 1, aggr_bytes: float = 0.0,
-                     cfg: NetConfig = DEFAULT_NET) -> StencilResult:
+                     cfg: NetConfig = DEFAULT_NET,
+                     engine: str = "vector") -> StencilResult:
     """N-dimensional Cartesian stencil halo exchange.
 
     The rank grid comes from ``topo`` (or ``dims`` + ``periodic``); every
@@ -733,18 +902,38 @@ def simulate_stencil(approach: str, *, dims: Sequence[int] = (),
         if len(face_bytes) != topo.n_dims:
             raise ValueError("need one face size per dimension")
     sched = _lookup(approach)
-    fab = _Fabric(cfg, n_vcis, n_ranks=topo.n_ranks)
+    fab = _make_fabric(engine, cfg, n_vcis, n_ranks=topo.n_ranks)
+    # Shared (or absent) ready tables mean one intent-equivalence class
+    # per dimension; per-rank tables refine that to (dimension, rank).
+    shared_ready = ready is None or \
+        np.asarray(ready).size == n_threads * theta
     ready_arr = _normalize_rank_ready(topo.n_ranks, n_threads, theta, ready)
     compute = float(ready_arr.max())
     n_part = n_threads * theta
-    scenarios = [Scenario(n_threads=n_threads, theta=theta,
-                          part_bytes=face_bytes[flow.dim] / n_part,
-                          ready=ready_arr[flow.src], n_vcis=n_vcis,
-                          aggr_bytes=aggr_bytes, cfg=cfg,
-                          src=flow.src, dst=flow.dst)
-                 for flow in topo.flows()]
-    incoming = _run_flows(sched, fab, scenarios)
-    rank_tts = [max(arr) if arr else 0.0 for arr in incoming]
+    srcs, dsts, fdims = topo.flow_arrays()
+    dim_bytes = [face_bytes[d] / n_part for d in range(topo.n_dims)]
+    rank_tts = None
+    if isinstance(fab, Fabric) and shared_ready:
+        # one intent class per dimension: build each batch once and
+        # re-stamp it per (src, dst) with vectorized gathers
+        templates = [Scenario(n_threads=n_threads, theta=theta,
+                              part_bytes=dim_bytes[d], ready=ready_arr[0],
+                              n_vcis=n_vcis, aggr_bytes=aggr_bytes, cfg=cfg)
+                     for d in range(topo.n_dims)]
+        tts_arr = _run_flows_classes(sched, fab, templates, fdims,
+                                     srcs, dsts)
+        if tts_arr is not None:
+            rank_tts = tts_arr.tolist()
+    if rank_tts is None:  # per-rank ready tables or dependent traffic
+        scenarios = [Scenario(n_threads=n_threads, theta=theta,
+                              part_bytes=dim_bytes[d],
+                              ready=ready_arr[s], n_vcis=n_vcis,
+                              aggr_bytes=aggr_bytes, cfg=cfg,
+                              src=int(s), dst=int(t),
+                              class_key=(d,) if shared_ready else (d, int(s)))
+                     for s, t, d in zip(srcs, dsts, fdims)]
+        incoming = _run_flows(sched, fab, scenarios)
+        rank_tts = [max(arr) if arr else 0.0 for arr in incoming]
     tts = max(rank_tts)
     return StencilResult(approach=approach, dims=topo.dims,
                          periodic=topo.periodic, face_bytes=tuple(face_bytes),
@@ -793,7 +982,8 @@ def simulate_imbalance(approach: str, *, n_ranks: int, workload, theta: int,
                        part_bytes: float, n_threads: int = 1,
                        n_vcis: int = 1, aggr_bytes: float = 0.0,
                        periodic: bool = True, seed: int = 0,
-                       cfg: NetConfig = DEFAULT_NET) -> ImbalanceResult:
+                       cfg: NetConfig = DEFAULT_NET,
+                       engine: str = "vector") -> ImbalanceResult:
     """Ring halo exchange with per-rank load imbalance from the paper's
     noise model.
 
@@ -815,7 +1005,7 @@ def simulate_imbalance(approach: str, *, n_ranks: int, workload, theta: int,
                          theta=theta, n_threads=n_threads,
                          face_bytes=(n_threads * theta * part_bytes,),
                          ready=ready, n_vcis=n_vcis, aggr_bytes=aggr_bytes,
-                         cfg=cfg)
+                         cfg=cfg, engine=engine)
     delays = ready.max(axis=(1, 2)) - ready.min(axis=(1, 2))
     return ImbalanceResult(approach=approach, n_ranks=n_ranks, theta=theta,
                            seed=seed, mean_delay_s=float(delays.mean()),

@@ -25,6 +25,8 @@ import math
 from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple, Union
 
+import numpy as np
+
 from . import commplan
 
 
@@ -134,6 +136,35 @@ class CartTopology:
         return tuple(Flow(rank, nb.rank, nb.dim, nb.direction)
                      for rank in range(self.n_ranks)
                      for nb in self.neighbors(rank))
+
+    def flow_arrays(self) -> Tuple["np.ndarray", "np.ndarray", "np.ndarray"]:
+        """Bulk ``(src, dst, dim)`` arrays of every directed face exchange.
+
+        Same flows in the same (src, dim, direction) order as
+        :meth:`flows`, built with array arithmetic instead of per-rank
+        Python objects — a 512-rank torus enumerates its 3072 flows in a
+        handful of vector ops.
+        """
+        n, nd = self.n_ranks, self.n_dims
+        ranks = np.arange(n, dtype=np.int64)
+        coords = np.stack(np.unravel_index(ranks, self.dims), axis=1)
+        dst = np.zeros((n, nd, 2), dtype=np.int64)
+        valid = np.zeros((n, nd, 2), dtype=bool)
+        for d in range(nd):
+            if self.dims[d] == 1:
+                continue  # a periodic wrap onto oneself is a local copy
+            for i, direction in enumerate((-1, +1)):
+                c = coords.copy()
+                c[:, d] += direction
+                in_bounds = (0 <= c[:, d]) & (c[:, d] < self.dims[d])
+                c[:, d] %= self.dims[d]
+                dst[:, d, i] = np.ravel_multi_index(tuple(c.T), self.dims)
+                valid[:, d, i] = in_bounds | self.periodic[d]
+        keep = valid.ravel()  # C-order ravel == (src, dim, direction) order
+        src = np.broadcast_to(ranks[:, None, None], (n, nd, 2)).ravel()[keep]
+        dim = np.broadcast_to(np.arange(nd, dtype=np.int64)[None, :, None],
+                              (n, nd, 2)).ravel()[keep]
+        return src, dst.ravel()[keep], dim
 
 
 @dataclass(frozen=True)

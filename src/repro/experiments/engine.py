@@ -22,12 +22,22 @@ must be a subset of the full grid.  The engine:
 Records are keyed by the *full* parameter dict (fixed values included),
 so changing a spec's constants invalidates its baseline records loudly
 (missing-key violations) instead of silently comparing different runs.
+
+Every entry point takes an ``engine`` argument (``"vector"`` — the
+batched fabric, the default — or ``"reference"`` — the scalar oracle);
+the engine is deliberately *not* part of the record key, because both
+engines must reproduce the same baseline records, but it does key the
+run caches so the two engines' results never alias.  The process-level
+cache can additionally be persisted to an opt-in JSON file
+(:func:`load_disk_cache` / :func:`save_disk_cache`, wired to
+``benchmarks.sweep --cache``), so a ``--check`` after an unrelated edit
+re-runs nothing.
 """
 
 from __future__ import annotations
 
 import itertools
-from concurrent.futures import ProcessPoolExecutor
+import json
 from dataclasses import dataclass, field
 from typing import (Any, Dict, List, Mapping, Optional, Sequence, Tuple)
 
@@ -35,6 +45,8 @@ from repro.core import perfmodel as pm
 from repro.core import simulator as sim
 
 BASELINE_VERSION = 1
+
+DEFAULT_ENGINE = "vector"
 
 # Exact-match floor: |new - ref| <= tol_rel * |ref| + ABS_FLOOR.
 ABS_FLOOR = 1e-9
@@ -77,18 +89,21 @@ def _gamma_ready(params: Mapping[str, Any]):
                              params["part_bytes"], gamma)
 
 
-def run_oneshot(params: Mapping[str, Any]) -> Dict[str, float]:
+def run_oneshot(params: Mapping[str, Any],
+                engine: str = DEFAULT_ENGINE) -> Dict[str, float]:
     r = sim.simulate(params["approach"],
                      n_threads=params.get("n_threads", 1),
                      theta=params.get("theta", 1),
                      part_bytes=params["part_bytes"],
                      ready=_gamma_ready(params),
                      n_vcis=params.get("n_vcis", 1),
-                     aggr_bytes=params.get("aggr_bytes", 0.0))
+                     aggr_bytes=params.get("aggr_bytes", 0.0),
+                     engine=engine)
     return {"time_us": r.time_us, "n_messages": float(r.n_messages)}
 
 
-def run_steady(params: Mapping[str, Any]) -> Dict[str, float]:
+def run_steady(params: Mapping[str, Any],
+               engine: str = DEFAULT_ENGINE) -> Dict[str, float]:
     r = sim.simulate_steady_state(params["approach"],
                                   n_iters=params["n_iters"],
                                   n_threads=params.get("n_threads", 1),
@@ -96,14 +111,16 @@ def run_steady(params: Mapping[str, Any]) -> Dict[str, float]:
                                   part_bytes=params["part_bytes"],
                                   ready=_gamma_ready(params),
                                   n_vcis=params.get("n_vcis", 1),
-                                  aggr_bytes=params.get("aggr_bytes", 0.0))
+                                  aggr_bytes=params.get("aggr_bytes", 0.0),
+                                  engine=engine)
     return {"amortized_us": r.amortized_s / sim.US,
             "steady_iter_us": r.steady_iter_s / sim.US,
             "setup_us": r.setup_s / sim.US,
             "n_messages": float(r.n_messages)}
 
 
-def run_halo(params: Mapping[str, Any]) -> Dict[str, float]:
+def run_halo(params: Mapping[str, Any],
+             engine: str = DEFAULT_ENGINE) -> Dict[str, float]:
     r = sim.simulate_halo(params["approach"],
                           n_ranks=params["n_ranks"],
                           theta=params.get("theta", 1),
@@ -112,11 +129,13 @@ def run_halo(params: Mapping[str, Any]) -> Dict[str, float]:
                           ready=_gamma_ready(params),
                           n_vcis=params.get("n_vcis", 1),
                           aggr_bytes=params.get("aggr_bytes", 0.0),
-                          periodic=params.get("periodic", True))
+                          periodic=params.get("periodic", True),
+                          engine=engine)
     return {"time_us": r.time_us, "n_messages": float(r.n_messages)}
 
 
-def run_stencil(params: Mapping[str, Any]) -> Dict[str, float]:
+def run_stencil(params: Mapping[str, Any],
+                engine: str = DEFAULT_ENGINE) -> Dict[str, float]:
     r = sim.simulate_stencil(params["approach"],
                              dims=tuple(params["dims"]),
                              periodic=params.get("periodic", True),
@@ -126,13 +145,15 @@ def run_stencil(params: Mapping[str, Any]) -> Dict[str, float]:
                              bytes_per_cell=params.get("bytes_per_cell", 8.0),
                              halo_width=params.get("halo_width", 1),
                              n_vcis=params.get("n_vcis", 1),
-                             aggr_bytes=params.get("aggr_bytes", 0.0))
+                             aggr_bytes=params.get("aggr_bytes", 0.0),
+                             engine=engine)
     return {"time_us": r.time_us, "n_messages": float(r.n_messages),
             "face_bytes_min": min(r.face_bytes),
             "face_bytes_max": max(r.face_bytes)}
 
 
-def run_imbalance(params: Mapping[str, Any]) -> Dict[str, float]:
+def run_imbalance(params: Mapping[str, Any],
+                  engine: str = DEFAULT_ENGINE) -> Dict[str, float]:
     r = sim.simulate_imbalance(params["approach"],
                                n_ranks=params["n_ranks"],
                                workload=pm.WORKLOADS[params["workload"]],
@@ -141,7 +162,8 @@ def run_imbalance(params: Mapping[str, Any]) -> Dict[str, float]:
                                n_threads=params.get("n_threads", 1),
                                n_vcis=params.get("n_vcis", 1),
                                aggr_bytes=params.get("aggr_bytes", 0.0),
-                               seed=params.get("seed", 0))
+                               seed=params.get("seed", 0),
+                               engine=engine)
     return {"time_us": r.time_us,
             "mean_delay_us": r.mean_delay_s / sim.US,
             "model_delay_us": r.model_delay_s / sim.US,
@@ -166,10 +188,10 @@ PRIMARY_METRIC = {
 }
 
 
-def _run_point(arg: Tuple[str, Dict[str, Any]]) -> Dict[str, float]:
+def _run_point(arg: Tuple[str, Dict[str, Any], str]) -> Dict[str, float]:
     """Top-level entry so ProcessPoolExecutor can pickle the work items."""
-    runner, params = arg
-    return RUNNERS[runner](params)
+    runner, params, engine = arg
+    return RUNNERS[runner](params, engine=engine)
 
 
 # ---------------------------------------------------------------------------
@@ -214,28 +236,84 @@ class SweepSpec:
             out.append(p)
         return out
 
-# Process-wide run cache: (runner, record_key) -> metrics.  Scenario runs
-# are pure functions of their params, so any spec/mode can share results.
-_CACHE: Dict[Tuple[str, str], Dict[str, float]] = {}
+# Process-wide run cache: (runner, record_key, engine) -> metrics.
+# Scenario runs are pure functions of their params, so any spec/mode can
+# share results; the engine is part of the key so the oracle and the
+# vectorized engine never alias each other's results.
+_CACHE: Dict[Tuple[str, str, str], Dict[str, float]] = {}
 
 
 def run_records(runner: str, points: Sequence[Mapping[str, Any]],
-                jobs: int = 1) -> Dict[str, Dict[str, float]]:
+                jobs: int = 1,
+                engine: str = DEFAULT_ENGINE) -> Dict[str, Dict[str, float]]:
     """Run deduplicated points through one runner; returns key -> metrics."""
     keyed: Dict[str, Dict[str, Any]] = {}
     for p in points:
         keyed.setdefault(record_key(p), dict(p))
-    missing = [(k, p) for k, p in keyed.items() if (runner, k) not in _CACHE]
+    missing = [(k, p) for k, p in keyed.items()
+               if (runner, k, engine) not in _CACHE]
     if jobs > 1 and len(missing) > 1:
+        from concurrent.futures import ProcessPoolExecutor
         with ProcessPoolExecutor(max_workers=jobs) as ex:
             for (k, _), metrics in zip(
                     missing,
-                    ex.map(_run_point, [(runner, p) for _, p in missing])):
-                _CACHE[(runner, k)] = metrics
+                    ex.map(_run_point,
+                           [(runner, p, engine) for _, p in missing])):
+                _CACHE[(runner, k, engine)] = metrics
     else:
         for k, p in missing:
-            _CACHE[(runner, k)] = _run_point((runner, p))
-    return {k: dict(_CACHE[(runner, k)]) for k in keyed}
+            _CACHE[(runner, k, engine)] = _run_point((runner, p, engine))
+    return {k: dict(_CACHE[(runner, k, engine)]) for k in keyed}
+
+
+# ---------------------------------------------------------------------------
+# Persistent run cache (opt-in)
+# ---------------------------------------------------------------------------
+
+def load_disk_cache(path: str) -> int:
+    """Seed the process cache from a JSON cache file; returns entries
+    loaded.  Entries are keyed by engine + runner + record key and the
+    file carries the baseline version — a version bump (or an unreadable
+    file) silently invalidates everything, which is always safe because
+    the cache only ever skips re-running pure functions."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+        if doc.get("baseline_version") != BASELINE_VERSION:
+            return 0
+        loaded = {}
+        for engine, runners in doc.get("records", {}).items():
+            for runner, recs in runners.items():
+                if runner not in RUNNERS:
+                    continue
+                for key, metrics in recs.items():
+                    loaded[(runner, key, engine)] = {
+                        m: float(v) for m, v in metrics.items()}
+    except (FileNotFoundError, json.JSONDecodeError, TypeError, ValueError,
+            AttributeError):
+        # structurally broken files invalidate wholesale — nothing was
+        # seeded into the process cache above
+        return 0
+    n = 0
+    for k, metrics in loaded.items():
+        if k not in _CACHE:
+            _CACHE[k] = metrics
+            n += 1
+    return n
+
+
+def save_disk_cache(path: str) -> int:
+    """Write the process cache to ``path``; returns entries written."""
+    records: Dict[str, Dict[str, Dict[str, Dict[str, float]]]] = {}
+    for (runner, key, engine) in sorted(_CACHE,
+                                        key=lambda k: (k[2], k[0], k[1])):
+        records.setdefault(engine, {}).setdefault(runner, {})[key] = \
+            _CACHE[(runner, key, engine)]
+    doc = {"baseline_version": BASELINE_VERSION, "records": records}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return len(_CACHE)
 
 
 def _add_gains(spec: SweepSpec, keyed: Mapping[str, Dict[str, Any]],
@@ -255,20 +333,21 @@ def _add_gains(spec: SweepSpec, keyed: Mapping[str, Dict[str, Any]],
             records[key][gain_name] = base_time[group] / records[key][metric]
 
 
-def run_spec(spec: SweepSpec, mode: str = "full",
-             jobs: int = 1) -> Dict[str, Dict[str, float]]:
+def run_spec(spec: SweepSpec, mode: str = "full", jobs: int = 1,
+             engine: str = DEFAULT_ENGINE) -> Dict[str, Dict[str, float]]:
     """Run one spec's grid; returns sorted key -> metrics (incl. gains)."""
     points = spec.points(mode)
     keyed = {record_key(p): p for p in points}
-    records = run_records(spec.runner, points, jobs=jobs)
+    records = run_records(spec.runner, points, jobs=jobs, engine=engine)
     if spec.baseline_approach:
         _add_gains(spec, keyed, records)
     return dict(sorted(records.items()))
 
 
-def run_specs(specs: Sequence[SweepSpec], mode: str = "full",
-              jobs: int = 1) -> Dict[str, Dict[str, Dict[str, float]]]:
-    return {spec.name: run_spec(spec, mode=mode, jobs=jobs)
+def run_specs(specs: Sequence[SweepSpec], mode: str = "full", jobs: int = 1,
+              engine: str = DEFAULT_ENGINE
+              ) -> Dict[str, Dict[str, Dict[str, float]]]:
+    return {spec.name: run_spec(spec, mode=mode, jobs=jobs, engine=engine)
             for spec in specs}
 
 

@@ -110,6 +110,19 @@ STENCIL3D = SweepSpec(
          " span the eager/bcopy/rendezvous protocols",
 )
 
+WEAK_SCALING = SweepSpec(
+    name="weak_scaling",
+    runner="stencil",
+    grid={"approach": _CONTENTION_APPROACHES,
+          "dims": ((2, 2, 2), (4, 4, 4), (8, 8, 4), (8, 8, 8))},
+    fixed={"local_shape": (64, 64, 64), "bytes_per_cell": 8.0, "theta": 4,
+           "n_threads": 2, "n_vcis": 2},
+    smoke={"approach": ("pt2pt_single", "part"), "dims": ((8, 8, 8),)},
+    baseline_approach="pt2pt_single",
+    note="weak scaling to a 512-rank periodic torus at a fixed 64^3 local"
+         " block (32 KiB faces); tractable only on the vectorized engine",
+)
+
 IMBALANCE = SweepSpec(
     name="imbalance",
     runner="imbalance",
@@ -125,7 +138,7 @@ IMBALANCE = SweepSpec(
 
 SPECS: Dict[str, SweepSpec] = {
     s.name: s for s in (FIG4, FIG5, FIG6, FIG7, FIG8, STEADY, HALO1D,
-                        STENCIL3D, IMBALANCE)
+                        STENCIL3D, WEAK_SCALING, IMBALANCE)
 }
 
 

@@ -16,8 +16,10 @@ import pathlib
 import pytest
 
 from repro.experiments import (BASELINE_VERSION, SPECS, compare_to_baseline,
-                               contention_crossover, record_key, run_spec,
-                               run_specs)
+                               contention_crossover, load_disk_cache,
+                               record_key, run_spec, run_specs,
+                               save_disk_cache)
+from repro.experiments import engine as engine_mod
 
 BASELINE_PATH = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_scenarios.json"
@@ -130,9 +132,115 @@ class TestSweepCliPartialUpdate:
         assert not (tmp_path / "missing.json").exists()
 
 
+class TestDiskCache:
+    """The opt-in persistent run cache: a second process re-runs nothing."""
+
+    def test_round_trip_seeds_process_cache(self, tmp_path):
+        path = tmp_path / "cache.json"
+        spec = SPECS["fig7_aggregation"]
+        run_spec(spec, mode="smoke")
+        before = dict(engine_mod._CACHE)
+        save_disk_cache(str(path))
+        engine_mod._CACHE.clear()
+        try:
+            assert load_disk_cache(str(path)) == len(before)
+            assert engine_mod._CACHE == before
+            # a fully-seeded cache means run_spec recomputes nothing:
+            # poison one of the spec's own records and watch it flow
+            # through untouched
+            key = record_key(spec.points("smoke")[0])
+            engine_mod._CACHE[(spec.runner, key, "vector")]["time_us"] = -1.0
+            results = run_spec(spec, mode="smoke")
+            assert results[key]["time_us"] == -1.0
+        finally:
+            # never leak poisoned records into later tests
+            engine_mod._CACHE.clear()
+
+    def test_malformed_cache_file_is_ignored_wholesale(self, tmp_path):
+        bad = tmp_path / "bad.json"
+        bad.write_text(json.dumps({
+            "baseline_version": BASELINE_VERSION,
+            "records": {"vector": {"oneshot": {
+                "a": {"time_us": 1.0},
+                "b": {"time_us": "not a number"}}}}}))
+        snapshot = dict(engine_mod._CACHE)
+        assert load_disk_cache(str(bad)) == 0
+        assert engine_mod._CACHE == snapshot  # no partial seeding
+
+    def test_version_mismatch_invalidates(self, tmp_path):
+        path = tmp_path / "cache.json"
+        path.write_text(json.dumps({"baseline_version": -1, "records": {
+            "vector": {"oneshot": {"k": {"time_us": 1.0}}}}}))
+        assert load_disk_cache(str(path)) == 0
+
+    def test_unreadable_file_is_empty(self, tmp_path):
+        assert load_disk_cache(str(tmp_path / "missing.json")) == 0
+        bad = tmp_path / "bad.json"
+        bad.write_text("{not json")
+        assert load_disk_cache(str(bad)) == 0
+
+    def test_cli_cache_flag(self, tmp_path):
+        path = tmp_path / "cache.json"
+        p1 = TestSweepCliPartialUpdate._sweep(
+            "--smoke", "--specs", "fig7_aggregation", "--cache", str(path))
+        assert p1.returncode == 0, p1.stderr
+        assert path.exists()
+        p2 = TestSweepCliPartialUpdate._sweep(
+            "--smoke", "--specs", "fig7_aggregation", "--cache", str(path),
+            "--check", str(BASELINE_PATH))
+        assert p2.returncode == 0, p2.stderr
+        assert "loaded" in p2.stderr and "cached records" in p2.stderr
+
+
+class TestEngineThroughputBench:
+    """--bench-engine: the committed BENCH_engine.json and its CI gate."""
+
+    BENCH_PATH = BASELINE_PATH.parent / "BENCH_engine.json"
+
+    def test_committed_document_shape(self):
+        doc = json.loads(self.BENCH_PATH.read_text())
+        cells = {(e["spec"], e["engine"]) for e in doc["entries"]}
+        for name in SPECS:
+            assert (name, "vector") in cells and (name, "reference") in cells
+        speedup = doc["totals"]["speedup_vector_vs_reference"]
+        assert speedup >= 5.0, (
+            f"vectorized engine only {speedup:.1f}x faster than the scalar"
+            " oracle on the full grids; regenerate BENCH_engine.json via"
+            " python -m benchmarks.sweep --bench-engine --full --bench-out"
+            " BENCH_engine.json")
+
+    @staticmethod
+    def _doc(vector_eps, reference_eps, events=50000):
+        return {"entries": [
+            {"spec": "s", "engine": "vector", "mode": "full",
+             "events": events, "events_per_sec": vector_eps},
+            {"spec": "s", "engine": "reference", "mode": "full",
+             "events": events, "events_per_sec": reference_eps}]}
+
+    def test_regression_check_is_relative_to_reference(self):
+        """The gate compares the same-machine vector/reference ratio, so
+        uniformly slower hardware never trips it."""
+        from benchmarks.sweep import check_bench_regression
+        ref = self._doc(1e6, 1e5)                      # committed: 10x
+        assert check_bench_regression(self._doc(6e5, 1e5), ref) == []  # 6x
+        assert check_bench_regression(self._doc(5e5, 5e4), ref) == []  # 2x-
+        #                              slower machine, same 10x ratio ^
+        slow = self._doc(4e5, 1e5)                     # 4x: >2x ratio drop
+        assert len(check_bench_regression(slow, ref)) == 1
+        tiny = self._doc(1e6, 1e5, events=10)          # noise floor
+        assert check_bench_regression(slow, tiny) == []
+
+
 @pytest.mark.slow
 class TestFullGrid:
     def test_full_grid_reproduces_baseline(self, baseline):
         results = run_specs(list(SPECS.values()), mode="full")
+        violations = compare_to_baseline(baseline, results)
+        assert not violations, "\n".join(violations)
+
+    def test_full_grid_reference_engine_matches_too(self, baseline):
+        """The scalar oracle reproduces the same committed records."""
+        results = run_specs(list(SPECS.values()), mode="full",
+                            engine="reference")
         violations = compare_to_baseline(baseline, results)
         assert not violations, "\n".join(violations)

@@ -1,0 +1,198 @@
+"""Differential property suite: the vectorized engine must match the
+scalar ``reference`` engine **bit-for-bit** — not within tolerance — on
+randomized scenarios across every driver and approach.
+
+The batched fabric performs the same IEEE-754 operations in the same
+per-resource order as the scalar oracle (grouped scans vectorize across
+resources, never reassociate within one), so exact float equality is the
+contract, and any reordering/reassociation bug fails loudly here.  The
+heuristic that routes narrow batches to the scalar path is also forced
+off (``_staged_fabric``) so the staged scans themselves are exercised on
+small scenarios, not just at 512-rank scale.
+"""
+
+import time
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # env without hypothesis: deterministic fallback
+    from _hypo import given, settings, st
+
+from repro.core import fabric as fb
+from repro.core import perfmodel as pm
+from repro.core import simulator as sim
+
+APPROACHES = sorted(sim.APPROACHES)
+PIPELINED = ("part", "part_old", "pt2pt_single", "pt2pt_many")
+
+
+def _ready(n_threads, theta, seed):
+    if seed is None:
+        return None
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0.0, 25e-6, size=(n_threads, theta))
+
+
+def _assert_same(rv, rr):
+    assert rv.n_messages == rr.n_messages
+    assert rv.time_s == rr.time_s        # bit-for-bit, no tolerance
+    assert rv.tts_s == rr.tts_s
+
+
+class TestOneShotDiff:
+    @given(ap=st.sampled_from(APPROACHES),
+           n=st.sampled_from([1, 2, 4, 8, 32]),
+           theta=st.sampled_from([1, 3, 8]),
+           size=st.sampled_from([64, 2048, 16384, 1 << 20]),
+           vcis=st.sampled_from([1, 2, 4]),
+           aggr=st.sampled_from([0, 4096]),
+           seed=st.integers(0, 5))
+    @settings(max_examples=60, deadline=None)
+    def test_bit_for_bit(self, ap, n, theta, size, vcis, aggr, seed):
+        kw = dict(n_threads=n, theta=theta, part_bytes=size, n_vcis=vcis,
+                  aggr_bytes=aggr, ready=_ready(n, theta, seed))
+        _assert_same(sim.simulate(ap, engine="vector", **kw),
+                     sim.simulate(ap, engine="reference", **kw))
+
+
+class TestSteadyStateDiff:
+    @given(ap=st.sampled_from(APPROACHES),
+           n=st.sampled_from([1, 4]), theta=st.sampled_from([2, 8]),
+           iters=st.sampled_from([1, 8]),
+           size=st.sampled_from([512, 8192]),
+           vcis=st.sampled_from([1, 4]), seed=st.integers(0, 3))
+    @settings(max_examples=40, deadline=None)
+    def test_bit_for_bit(self, ap, n, theta, iters, size, vcis, seed):
+        kw = dict(n_iters=iters, n_threads=n, theta=theta, part_bytes=size,
+                  n_vcis=vcis, aggr_bytes=16384,
+                  ready=_ready(n, theta, seed))
+        rv = sim.simulate_steady_state(ap, engine="vector", **kw)
+        rr = sim.simulate_steady_state(ap, engine="reference", **kw)
+        assert rv.iter_times_s == rr.iter_times_s
+        assert rv.setup_s == rr.setup_s
+        assert rv.tts_s == rr.tts_s and rv.n_messages == rr.n_messages
+
+
+class TestHaloDiff:
+    @given(ap=st.sampled_from(APPROACHES),
+           ranks=st.sampled_from([2, 4, 9]),
+           n=st.sampled_from([1, 2]), theta=st.sampled_from([1, 4]),
+           size=st.sampled_from([256, 4096, 1 << 20]),
+           vcis=st.sampled_from([1, 2]),
+           periodic=st.booleans(), seed=st.integers(0, 3))
+    @settings(max_examples=40, deadline=None)
+    def test_bit_for_bit(self, ap, ranks, n, theta, size, vcis, periodic,
+                         seed):
+        kw = dict(n_ranks=ranks, theta=theta, part_bytes=size, n_threads=n,
+                  n_vcis=vcis, periodic=periodic,
+                  ready=_ready(n, theta, seed))
+        rv = sim.simulate_halo(ap, engine="vector", **kw)
+        rr = sim.simulate_halo(ap, engine="reference", **kw)
+        assert rv.rank_tts_s == rr.rank_tts_s
+        _assert_same(rv, rr)
+
+
+class TestStencilDiff:
+    @given(ap=st.sampled_from(APPROACHES),
+           dims=st.sampled_from([(2, 2), (3, 2), (2, 2, 2), (4, 1, 2)]),
+           n=st.sampled_from([1, 2]), theta=st.sampled_from([1, 4]),
+           vcis=st.sampled_from([1, 2]),
+           periodic=st.booleans(), seed=st.integers(0, 3))
+    @settings(max_examples=40, deadline=None)
+    def test_bit_for_bit(self, ap, dims, n, theta, vcis, periodic, seed):
+        kw = dict(dims=dims, theta=theta, n_threads=n, n_vcis=vcis,
+                  periodic=periodic, local_shape=(24, 8, 4)[:len(dims)],
+                  ready=_ready(n, theta, seed))
+        rv = sim.simulate_stencil(ap, engine="vector", **kw)
+        rr = sim.simulate_stencil(ap, engine="reference", **kw)
+        assert rv.rank_tts_s == rr.rank_tts_s
+        assert rv.sent_per_rank == rr.sent_per_rank
+        assert rv.face_bytes == rr.face_bytes
+        _assert_same(rv, rr)
+
+    @given(ap=st.sampled_from(PIPELINED),
+           dims=st.sampled_from([(3, 2), (2, 2, 2)]),
+           theta=st.sampled_from([2, 4]), seed=st.integers(0, 3))
+    @settings(max_examples=20, deadline=None)
+    def test_staged_scans_forced(self, ap, dims, theta, seed):
+        """Small grids through the staged scans (heuristic disabled), so
+        the grouped scans themselves are differentially tested — not
+        just the scalar fallback the heuristic would pick here."""
+        kw = dict(dims=dims, theta=theta, n_threads=2, n_vcis=2,
+                  local_shape=(24, 8, 4)[:len(dims)],
+                  ready=_ready(2, theta, seed))
+        cutoff, par = fb.SCALAR_BATCH_CUTOFF, fb.MIN_GROUP_PARALLELISM
+        fb.SCALAR_BATCH_CUTOFF = fb.MIN_GROUP_PARALLELISM = 0
+        try:
+            rv = sim.simulate_stencil(ap, engine="vector", **kw)
+        finally:
+            fb.SCALAR_BATCH_CUTOFF, fb.MIN_GROUP_PARALLELISM = cutoff, par
+        rr = sim.simulate_stencil(ap, engine="reference", **kw)
+        assert rv.rank_tts_s == rr.rank_tts_s
+        _assert_same(rv, rr)
+
+
+class TestImbalanceDiff:
+    @given(ap=st.sampled_from(PIPELINED),
+           ranks=st.sampled_from([2, 6]),
+           wl=st.sampled_from(["fft", "stencil"]),
+           theta=st.sampled_from([2, 4]), seed=st.integers(0, 4))
+    @settings(max_examples=25, deadline=None)
+    def test_bit_for_bit(self, ap, ranks, wl, theta, seed):
+        kw = dict(n_ranks=ranks, workload=pm.WORKLOADS[wl], theta=theta,
+                  part_bytes=1 << 18, n_threads=2, n_vcis=2, seed=seed)
+        rv = sim.simulate_imbalance(ap, engine="vector", **kw)
+        rr = sim.simulate_imbalance(ap, engine="reference", **kw)
+        assert rv.rank_tts_s == rr.rank_tts_s
+        assert rv.mean_delay_s == rr.mean_delay_s
+        _assert_same(rv, rr)
+
+
+class TestReadyShapeValidation:
+    """Mis-shaped ready tables raise a ValueError naming the expected
+    shape instead of a bare NumPy reshape error."""
+
+    def test_flow_ready_shape_error(self):
+        with pytest.raises(ValueError,
+                           match=r"\(n_threads, theta\) = \(2, 4\)"):
+            sim.simulate("part", n_threads=2, theta=4, part_bytes=64,
+                         ready=np.zeros((3, 4)))
+
+    def test_flow_ready_size_match_still_reshapes(self):
+        r = sim.simulate("part", n_threads=2, theta=4, part_bytes=64,
+                         ready=np.zeros(8))
+        assert r.n_messages == 8
+
+    def test_rank_ready_shape_error(self):
+        with pytest.raises(ValueError,
+                           match=r"\(n_ranks, n_threads, theta\) ="
+                                 r" \(4, 1, 2\)"):
+            sim.simulate_stencil("part", dims=(4,), theta=2,
+                                 face_bytes=(64.0,),
+                                 ready=np.zeros((3, 1, 2)))
+
+    def test_rank_ready_shared_table_broadcasts(self):
+        r = sim.simulate_stencil("part", dims=(4,), theta=2,
+                                 face_bytes=(64.0,), ready=np.zeros((1, 2)))
+        assert r.n_ranks == 4
+
+
+class TestEngineSelection:
+    def test_unknown_engine_raises(self):
+        with pytest.raises(ValueError, match="unknown engine"):
+            sim.simulate("part", n_threads=1, theta=1, part_bytes=64,
+                         engine="warp")
+
+    def test_weak_scaling_512_ranks_is_fast(self):
+        """Acceptance: a 512-rank periodic torus runs in the smoke tier
+        in well under 10 s on the vectorized engine."""
+        t0 = time.perf_counter()
+        r = sim.simulate_stencil("part", dims=(8, 8, 8), theta=4,
+                                 n_threads=2, local_shape=(64, 64, 64),
+                                 n_vcis=2)
+        wall = time.perf_counter() - t0
+        assert r.n_ranks == 512
+        assert r.n_messages == 512 * 6 * 8  # 6 faces x 8 wire messages
+        assert wall < 10.0, f"512-rank stencil took {wall:.1f}s"

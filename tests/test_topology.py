@@ -75,6 +75,22 @@ class TestCartTopology:
         assert len(t.neighbors(interior)) == 4
         assert t.shift(corner, 0, -1) is None
 
+    @given(dims=st.sampled_from(GRIDS), periodic=st.booleans())
+    @settings(max_examples=24, deadline=None)
+    def test_flow_arrays_match_flows(self, dims, periodic):
+        """The bulk (src, dst, dim) arrays are the object flows, in the
+        same (src, dim, direction) order."""
+        topo = CartTopology.create(dims, periodic)
+        want = [(f.src, f.dst, f.dim) for f in topo.flows()]
+        src, dst, dim = topo.flow_arrays()
+        assert list(zip(src.tolist(), dst.tolist(), dim.tolist())) == want
+
+    def test_flow_arrays_mixed_periodicity(self):
+        topo = CartTopology.create((4, 3), periodic=(True, False))
+        want = [(f.src, f.dst, f.dim) for f in topo.flows()]
+        src, dst, dim = topo.flow_arrays()
+        assert list(zip(src.tolist(), dst.tolist(), dim.tolist())) == want
+
     def test_size2_periodic_dim_has_two_faces_to_same_rank(self):
         t = CartTopology.create((2,), periodic=True)
         assert [nb.rank for nb in t.neighbors(0)] == [1, 1]

@@ -50,6 +50,12 @@ from repro.experiments import engine as _engine_mod
 
 BENCH_ENGINES = ("vector", "reference")
 BENCH_VERSION = 1
+# Runners excluded from --bench-engine: the autotune runner re-simulates
+# a whole candidate grid of mostly tiny (scalar-path) scenarios per
+# record, so its wall time measures planner overhead, not fabric
+# throughput — including it would dilute the vector/reference ratio the
+# regression gate tracks.
+BENCH_EXCLUDED_RUNNERS = ("autotune",)
 # Grids below this many simulated wire messages finish in a handful of
 # milliseconds, where the vector/reference ratio is timer noise (and the
 # adaptive routing sends them down the scalar path anyway, pinning the
@@ -63,6 +69,9 @@ def _parse_args(argv):
     ap = argparse.ArgumentParser(
         prog="python -m benchmarks.sweep", description=__doc__,
         formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--list", action="store_true",
+                    help="print every registered spec with its runner and"
+                         " one-line description, then exit")
     ap.add_argument("--smoke", action="store_true",
                     help="run the reduced smoke grids (default)")
     ap.add_argument("--full", action="store_true",
@@ -211,12 +220,25 @@ def check_bench_regression(doc: dict, ref: dict) -> list:
     return violations
 
 
+def list_specs(specs) -> None:
+    """One line per spec: name, runner, grid sizes, description."""
+    for spec in specs:
+        n_full = len(spec.points("full"))
+        n_smoke = len(spec.points("smoke"))
+        print(f"{spec.name:18s} {spec.runner:9s} "
+              f"{n_full:4d} records ({n_smoke} smoke)  {spec.note}")
+
+
 def main(argv=None) -> int:
     args = _parse_args(argv)
     mode = "full" if (args.full or args.update) else "smoke"
     specs = _select_specs(args)
     if specs is None:
         return 2
+
+    if args.list:
+        list_specs(specs)
+        return 0
 
     if args.bench_engine:
         clash = [f for f in ("update", "check", "out", "cache", "profile")
@@ -226,6 +248,13 @@ def main(argv=None) -> int:
                   f" combined with {', '.join('--' + f for f in clash)}",
                   file=sys.stderr)
             return 2
+        skipped = [s.name for s in specs
+                   if s.runner in BENCH_EXCLUDED_RUNNERS]
+        if skipped:
+            print(f"# bench excludes {', '.join(skipped)} (runner measures"
+                  " planner overhead, not fabric throughput)",
+                  file=sys.stderr)
+        specs = [s for s in specs if s.runner not in BENCH_EXCLUDED_RUNNERS]
         doc = run_bench_engine(specs, mode)
         if args.bench_check:
             try:

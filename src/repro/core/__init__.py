@@ -1,6 +1,7 @@
 """Core: the paper's contribution (partitioned communication) for JAX/TPU.
 
   perfmodel            — closed-form gain/delay-rate model (paper §2.2, App A)
+  planner              — model-driven CommPlan autotuner + closed-loop regret
   simulator            — schedule registry + multi-rank fabric + scenarios
   topology             — N-D Cartesian rank grids + per-dimension face payloads
   commplan             — THE plan layer: gcd agreement, aggregation, channels
@@ -11,9 +12,11 @@
   flash_decode         — partitioned-KV decode attention with LSE combine
 """
 
-from . import commplan, perfmodel, simulator, topology  # noqa: F401
+from . import commplan, perfmodel, planner, simulator, topology  # noqa: F401
 from .commplan import (CommPlan, WireMessage, channel_slices,  # noqa: F401
-                       channel_streams, plan_sized, plan_uniform)
+                       channel_streams, plan_auto, plan_sized, plan_uniform)
+from .planner import (Candidate, GridEval, PlanChoice,  # noqa: F401
+                      ScenarioDesc, choose_plan, evaluate_grid, rank_plans)
 from .partition import (PartitionedRequest, agree_message_count,  # noqa: F401
                         aggregate_message_count)
 from .topology import CartTopology, HaloSpec  # noqa: F401

@@ -47,13 +47,37 @@ class BucketPlan:
         return sum(b.nbytes for b in self.buckets)
 
 
-def make_plan(leaves: Sequence[Any], aggr_bytes: int,
+def leaf_count(leaf: Any) -> int:
+    """Element count of a shape carrier (scalars count as one)."""
+    return int(np.prod(leaf.shape)) if leaf.shape else 1
+
+
+def leaf_nbytes(leaf: Any) -> int:
+    """Payload bytes of a shape/dtype carrier — the one sizing rule
+    shared by the bucket planner and the autotuner's scenario builder."""
+    return leaf_count(leaf) * jnp.dtype(leaf.dtype).itemsize
+
+
+def make_plan(leaves: Sequence[Any], aggr_bytes,
               n_channels: int = 1) -> BucketPlan:
-    """Aggregate leaves (shape/dtype carriers) into buckets via CommPlan."""
-    counts = [int(np.prod(leaf.shape)) if leaf.shape else 1
-              for leaf in leaves]
-    nbytes = [n * jnp.dtype(leaf.dtype).itemsize
-              for n, leaf in zip(counts, leaves)]
+    """Aggregate leaves (shape/dtype carriers) into buckets via CommPlan.
+
+    ``aggr_bytes="auto"`` asks the :mod:`repro.core.planner` autotuner
+    to pick the aggregation bound (and, with ``n_channels="auto"``, the
+    channel count) from the closed-form model on a TPU-targeted
+    :class:`~repro.core.fabric.NetConfig` — the self-configuring analogue
+    of tuning ``MPIR_CVAR_PART_AGGR_SIZE`` per workload.
+    """
+    counts = [leaf_count(leaf) for leaf in leaves]
+    nbytes = [leaf_nbytes(leaf) for leaf in leaves]
+    if aggr_bytes == "auto" or n_channels == "auto":
+        from . import planner
+        desc = planner.gradient_desc(float(sum(nbytes)))
+        choice = planner.choose_plan(desc, approaches=("part",))
+        if aggr_bytes == "auto":
+            aggr_bytes = int(choice.aggr_bytes)
+        if n_channels == "auto":
+            n_channels = choice.n_vcis
     plan = commplan.plan_sized(nbytes, aggr_bytes=aggr_bytes,
                                n_channels=n_channels)
     buckets = tuple(

@@ -201,3 +201,49 @@ def plan_sized(sizes: Sequence[float], *, aggr_bytes: float = 0.0,
             flush()
     flush()
     return CommPlan(tuple(messages), len(sizes))
+
+
+def plan_auto(total_bytes: float = None, *, sizes: Sequence[float] = None,
+              n_threads: int = 1, workload=None, cfg=None,
+              max_parts: int = 512, max_vcis: int = 32):
+    """Model-chosen plan: the :mod:`repro.core.planner` autotuner picks
+    the partition count, aggregation bound and channel count from the
+    closed-form performance model, then the matching planner builds the
+    plan.
+
+    Two forms, mirroring the two planners above:
+
+    * ``plan_auto(total_bytes, n_threads=...)`` — uniform partitions:
+      the chosen ``theta`` fixes ``n_threads * theta`` partitions,
+      planned by :func:`plan_uniform`;
+    * ``plan_auto(sizes=[...])`` — heterogeneous items (gradient
+      leaves): item sizes are given, only the aggregation bound and
+      channel count are chosen, planned by :func:`plan_sized`.
+
+    ``workload`` (a :class:`~repro.core.perfmodel.Workload`) describes
+    the compute profile whose ramp the plan should overlap; ``cfg`` a
+    :class:`~repro.core.fabric.NetConfig` (defaults to the MeluXina-like
+    calibration).  Returns ``(plan, choice)`` — the immutable
+    :class:`CommPlan` plus the :class:`~repro.core.planner.PlanChoice`
+    with the model's predicted time and term breakdown.
+    """
+    from . import planner  # deferred: planner imports this module
+    if (total_bytes is None) == (sizes is None):
+        raise ValueError("pass exactly one of total_bytes or sizes")
+    if sizes is not None:
+        total_bytes = float(sum(sizes))
+    kw = {} if cfg is None else {"cfg": cfg}
+    desc = planner.ScenarioDesc(total_bytes=float(total_bytes),
+                                n_threads=n_threads, workload=workload,
+                                max_parts=max_parts, max_vcis=max_vcis,
+                                **kw)
+    choice = planner.choose_plan(desc, approaches=("part",))
+    if sizes is not None:
+        plan = plan_sized(sizes, aggr_bytes=choice.aggr_bytes,
+                          n_channels=choice.n_vcis)
+    else:
+        n_part = n_threads * choice.theta
+        plan = plan_uniform(n_part, n_part, total_bytes / n_part,
+                            aggr_bytes=choice.aggr_bytes,
+                            n_channels=choice.n_vcis)
+    return plan, choice

@@ -100,6 +100,43 @@ def _bucketed_pmean(tree, sync: SyncConfig, aggr_override: Optional[int] = None)
                           n_channels=sync.n_channels)
 
 
+def auto_sync_config(params, *, axes: Axes = ("data",),
+                     comm_dtype: Optional[str] = None,
+                     tokens_per_step: float = 4096.0,
+                     max_channels: int = 8,
+                     workload=None, cfg=None) -> SyncConfig:
+    """Model-chosen gradient-sync configuration (the autotuned analogue
+    of hand-picking ``SyncConfig`` constants).
+
+    Flattens ``params`` to measure the gradient payload, describes the
+    backward pass as a :func:`repro.core.planner.training_workload` ramp
+    (``tokens_per_step`` sets how much compute hides each gradient
+    byte), and lets the planner search the (approach, aggregation,
+    channels) space on a TPU-targeted NetConfig.  The chosen approach
+    maps onto the paper's §2.3 taxonomy exactly as the modes do:
+    ``pt2pt_single -> bulk``, ``pt2pt_many -> per_leaf``,
+    ``part -> partitioned`` with the chosen bucket bound and channel
+    count.
+    """
+    from . import planner
+
+    from .bucketing import leaf_nbytes
+
+    total = float(sum(leaf_nbytes(x) for x in jax.tree.leaves(params)))
+    if workload is None:
+        workload = planner.training_workload(2.0 * tokens_per_step)
+    kw = {} if cfg is None else {"cfg": cfg}
+    desc = planner.gradient_desc(total, workload=workload,
+                                 max_channels=max_channels, **kw)
+    choice = planner.choose_plan(desc)
+    mode = {"pt2pt_single": "bulk", "pt2pt_many": "per_leaf",
+            "part": "partitioned"}[choice.approach]
+    aggr = int(choice.aggr_bytes) if mode == "partitioned" else \
+        SyncConfig.aggr_bytes
+    return SyncConfig(mode=mode, axes=axes, aggr_bytes=aggr,
+                      comm_dtype=comm_dtype, n_channels=choice.n_vcis)
+
+
 def make_layer_hook(sync: SyncConfig, layer_specs=None) -> Callable:
     """Hook wrapping each scanned layer's params (see lm.forward param_hook).
 

@@ -2,9 +2,11 @@
 
   engine  — SweepSpec grid expansion, dedup/cached runs, process-pool
             parallelism, golden-baseline emit + tolerance check
-  specs   — the registry: one spec per paper figure (Figs 4-8) and per
+  specs   — the registry: one spec per paper figure (Figs 4-8), per
             post-paper scenario (steady-state, 1-D halo, N-D stencil,
-            load imbalance)
+            weak scaling, load imbalance), and the closed-loop
+            ``autotune`` spec (model-chosen plan vs simulated grid-best
+            regret, via repro.core.planner)
 
 ``python -m benchmarks.sweep`` is the CLI; ``BENCH_scenarios.json`` at
 the repo root is the committed golden baseline checked in CI and by

@@ -42,6 +42,7 @@ from dataclasses import dataclass, field
 from typing import (Any, Dict, List, Mapping, Optional, Sequence, Tuple)
 
 from repro.core import perfmodel as pm
+from repro.core import planner as pl
 from repro.core import simulator as sim
 
 BASELINE_VERSION = 1
@@ -170,12 +171,53 @@ def run_imbalance(params: Mapping[str, Any],
             "n_messages": float(r.n_messages)}
 
 
+def autotune_desc(params: Mapping[str, Any]) -> pl.ScenarioDesc:
+    """A sweep point's scenario description for the planner.
+
+    ``workload`` is a :data:`repro.core.perfmodel.WORKLOADS` name or
+    ``"none"`` (no compute ramp, nothing to overlap).
+    """
+    name = params.get("workload", "none")
+    workload = None if name == "none" else pm.WORKLOADS[name]
+    return pl.ScenarioDesc(total_bytes=float(params["total_bytes"]),
+                           n_threads=params.get("n_threads", 1),
+                           workload=workload,
+                           max_parts=params.get("max_parts", 512),
+                           max_vcis=params.get("max_vcis", 32))
+
+
+def run_autotune(params: Mapping[str, Any],
+                 engine: str = DEFAULT_ENGINE) -> Dict[str, float]:
+    """The closed loop: the model picks a plan, the simulator grades it.
+
+    Simulates the model's pick *and* every candidate of the search grid
+    and records the regret (auto / grid-best simulated time) plus the
+    chosen parameters — so the committed baseline pins both the model's
+    decisions and how good they are.  Everything is deterministic and
+    engine-independent (the two fabrics are bit-for-bit identical).
+    """
+    ev = pl.evaluate_grid(autotune_desc(params), engine=engine)
+    ch = ev.choice
+    return {"auto_time_us": ev.auto_time_s / sim.US,
+            "best_time_us": ev.best_time_s / sim.US,
+            "regret": ev.regret,
+            "predicted_us": ch.predicted_us,
+            "chosen_approach_idx": float(
+                pl.PLANNER_APPROACHES.index(ch.approach)),
+            "chosen_theta": float(ch.theta),
+            "chosen_aggr_bytes": float(ch.aggr_bytes),
+            "chosen_n_vcis": float(ch.n_vcis),
+            "n_candidates": float(ev.n_candidates),
+            "n_messages": float(ev.auto_messages)}
+
+
 RUNNERS = {
     "oneshot": run_oneshot,
     "steady": run_steady,
     "halo": run_halo,
     "stencil": run_stencil,
     "imbalance": run_imbalance,
+    "autotune": run_autotune,
 }
 
 # Metric a spec's gain derives from, per runner.
@@ -185,6 +227,7 @@ PRIMARY_METRIC = {
     "halo": "time_us",
     "stencil": "time_us",
     "imbalance": "time_us",
+    "autotune": "auto_time_us",
 }
 
 

@@ -136,9 +136,26 @@ IMBALANCE = SweepSpec(
     note="per-rank compute noise from the Appendix-A (eps, delta) model",
 )
 
+AUTOTUNE = SweepSpec(
+    name="autotune",
+    runner="autotune",
+    grid={"total_bytes": (1 << 20, 16 << 20),
+          "n_threads": (1, 4, 16),
+          "workload": ("none", "fft", "stencil")},
+    fixed={"max_vcis": 32},
+    smoke={"total_bytes": (1 << 20,),
+           "n_threads": (1, 4, 16),
+           "workload": ("none", "fft", "stencil")},
+    tolerances={"chosen_approach_idx": 0.0, "chosen_theta": 0.0,
+                "chosen_aggr_bytes": 0.0, "chosen_n_vcis": 0.0,
+                "n_candidates": 0.0},
+    note="closed-loop autotuner: model-chosen plan vs simulated"
+         " grid-best, regret per scenario",
+)
+
 SPECS: Dict[str, SweepSpec] = {
     s.name: s for s in (FIG4, FIG5, FIG6, FIG7, FIG8, STEADY, HALO1D,
-                        STENCIL3D, WEAK_SCALING, IMBALANCE)
+                        STENCIL3D, WEAK_SCALING, IMBALANCE, AUTOTUNE)
 }
 
 

@@ -1,0 +1,90 @@
+"""Executable documentation: the docs cannot rot.
+
+* every fenced ``python`` block in ``README.md`` and ``docs/*.md`` must
+  execute successfully (blocks run top-to-bottom per file in one shared
+  namespace, so later blocks may build on earlier ones);
+* the spec table in ``docs/scenarios.md`` must stay in sync with the
+  ``repro.experiments`` registry (same names, runners and descriptions
+  that ``benchmarks.sweep --list`` prints);
+* ``sweep --list`` itself prints every registered spec.
+"""
+
+import os
+import pathlib
+import re
+import subprocess
+import sys
+
+import pytest
+
+from repro.experiments import SPECS
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = [REPO / "README.md"] + sorted((REPO / "docs").glob("*.md"))
+
+_BLOCK_RE = re.compile(r"```python\n(.*?)```", re.S)
+_SPEC_ROW_RE = re.compile(r"^\| `([a-z0-9_]+)` \| `([a-z]+)` \| (.+) \|$",
+                          re.M)
+
+
+def python_blocks(path: pathlib.Path):
+    return _BLOCK_RE.findall(path.read_text())
+
+
+class TestExecutableDocs:
+    def test_docs_contain_python_blocks_at_all(self):
+        """The suite must be exercising something: the model walkthrough
+        carries executable blocks by design."""
+        assert len(python_blocks(REPO / "docs" / "model.md")) >= 3
+
+    @pytest.mark.parametrize("path", DOC_FILES, ids=lambda p: p.name)
+    def test_python_blocks_execute(self, path):
+        blocks = python_blocks(path)
+        if not blocks:
+            pytest.skip(f"{path.name} has no fenced python blocks")
+        ns = {"__name__": f"docs_exec_{path.stem}"}
+        for i, block in enumerate(blocks):
+            code = compile(block, f"{path.name}[block {i}]", "exec")
+            exec(code, ns)  # noqa: S102 — executing our own docs is the test
+
+
+class TestSpecTableSync:
+    """docs/scenarios.md's registry table == the SPECS registry.
+
+    Adding a spec without documenting it (or editing a note in one
+    place only) fails here; `benchmarks.sweep --list` prints the same
+    (name, runner, note) triples from the registry.
+    """
+
+    def _table(self):
+        text = (REPO / "docs" / "scenarios.md").read_text()
+        return {name: (runner, desc)
+                for name, runner, desc in _SPEC_ROW_RE.findall(text)}
+
+    def test_table_matches_registry(self):
+        table = self._table()
+        registry = {name: (spec.runner, spec.note)
+                    for name, spec in SPECS.items()}
+        assert set(table) == set(registry), (
+            "spec table in docs/scenarios.md out of sync with"
+            " repro.experiments.SPECS")
+        for name in registry:
+            assert table[name] == registry[name], (
+                f"{name}: docs/scenarios.md row differs from the spec"
+                f" (runner/note)")
+
+
+class TestSweepListCli:
+    def test_list_prints_every_spec(self):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.sweep", "--list"],
+            cwd=REPO, env=env, capture_output=True, text=True)
+        assert proc.returncode == 0, proc.stderr
+        for name, spec in SPECS.items():
+            line = next((ln for ln in proc.stdout.splitlines()
+                         if ln.startswith(name)), None)
+            assert line is not None, f"{name} missing from --list output"
+            assert spec.note in line
+            assert spec.runner in line

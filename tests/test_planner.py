@@ -1,0 +1,173 @@
+"""Property tests for the model-driven CommPlan autotuner.
+
+Three contracts:
+
+* **never worse than the hand-picked default** — the default candidate
+  is always in the search grid, so the auto choice's *predicted* time
+  is <= the default plan's for every sampled scenario;
+* **closed-loop regret is bounded** — on the committed ``autotune``
+  smoke grid the model's pick, graded by the discrete-event simulator,
+  is within 10% of the simulated grid-best (the acceptance criterion
+  the baseline records pin);
+* **degenerate scenarios are handled** — one partition, one VCI, tiny
+  payloads, missing workload.
+"""
+
+import math
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # env without hypothesis: deterministic fallback
+    from _hypo import given, settings, st
+
+from repro.core import commplan, perfmodel as pm, planner as pl
+from repro.core.partition import PartitionedRequest
+from repro.experiments import SPECS
+from repro.experiments.engine import autotune_desc, run_autotune
+
+WORKLOADS = (None, pm.FFT, pm.STENCIL)
+
+SCENARIO = dict(
+    total_bytes=st.sampled_from([4096, 64 << 10, 1 << 20, 16 << 20]),
+    n_threads=st.sampled_from([1, 2, 4, 8, 16, 32]),
+    workload=st.sampled_from(WORKLOADS),
+)
+
+
+class TestPrediction:
+    @given(**SCENARIO)
+    @settings(max_examples=40, deadline=None)
+    def test_terms_sum_to_prediction(self, total_bytes, n_threads, workload):
+        desc = pl.ScenarioDesc(total_bytes=float(total_bytes),
+                               n_threads=n_threads, workload=workload)
+        for choice in pl.rank_plans(desc):
+            total = sum(t for _, t in choice.terms)
+            assert math.isclose(total, choice.predicted_s, rel_tol=1e-12)
+            assert choice.predicted_s > 0
+
+    @given(**SCENARIO)
+    @settings(max_examples=40, deadline=None)
+    def test_auto_never_predicts_worse_than_default(self, total_bytes,
+                                                    n_threads, workload):
+        desc = pl.ScenarioDesc(total_bytes=float(total_bytes),
+                               n_threads=n_threads, workload=workload)
+        default = pl.predict(desc, pl.default_candidate(desc))
+        assert pl.choose_plan(desc).predicted_s <= default.predicted_s
+        # and within the partitioned-only search too
+        part_best = pl.choose_plan(desc, approaches=("part",))
+        assert part_best.predicted_s <= default.predicted_s
+
+    def test_choice_is_deterministic(self):
+        desc = pl.ScenarioDesc(total_bytes=float(1 << 20), n_threads=4,
+                               workload=pm.FFT)
+        a, b = pl.choose_plan(desc), pl.choose_plan(desc)
+        assert a == b
+
+    def test_compute_is_theta_invariant(self):
+        desc = pl.ScenarioDesc(total_bytes=float(1 << 20), n_threads=4,
+                               workload=pm.FFT)
+        times = {desc.compute_seconds(th) for th in (1, 2, 8, 64)}
+        assert len({round(t, 18) for t in times}) == 1
+
+    def test_unknown_approach_rejected(self):
+        desc = pl.ScenarioDesc(total_bytes=1024.0)
+        with pytest.raises(ValueError):
+            pl.predict(desc, pl.Candidate("rma_single_passive", 1, 0.0, 1))
+        with pytest.raises(ValueError):
+            pl.candidate_grid(desc, approaches=("part", "bogus"))
+        with pytest.raises(ValueError):
+            pl.candidate_grid(desc, approaches=())
+
+
+class TestDegenerateScenarios:
+    def test_single_partition_single_vci(self):
+        desc = pl.ScenarioDesc(total_bytes=float(1 << 20), n_threads=1,
+                               max_parts=1, max_vcis=1)
+        choice = pl.choose_plan(desc)
+        assert choice.theta == 1 and choice.n_vcis == 1
+        ev = pl.evaluate_grid(desc)
+        assert ev.regret <= 1.10
+
+    def test_tiny_payload(self):
+        desc = pl.ScenarioDesc(total_bytes=64.0, n_threads=1,
+                               workload=pm.FFT)
+        ev = pl.evaluate_grid(desc)
+        assert ev.regret <= 1.10
+
+    def test_invalid_desc_rejected(self):
+        with pytest.raises(ValueError):
+            pl.ScenarioDesc(total_bytes=0.0)
+        with pytest.raises(ValueError):
+            pl.ScenarioDesc(total_bytes=1.0, n_threads=0)
+
+    def test_ready_ramp_matches_workload_sampling(self):
+        """The deterministic ramp is Workload.sample_ready at sigma=0."""
+        desc = pl.ScenarioDesc(total_bytes=float(1 << 20), n_threads=4,
+                               workload=pm.FFT)
+        ramp = desc.ready(8)
+        noiseless = pm.Workload(ai=pm.FFT.ai, ci=pm.FFT.ci)
+        rng = np.random.default_rng(0)
+        expect = noiseless.sample_ready(4, 8, desc.part_bytes(8), rng)
+        np.testing.assert_allclose(ramp, expect, rtol=1e-12)
+
+
+class TestClosedLoopRegret:
+    """The acceptance criterion: on the committed autotune smoke grid the
+    auto-chosen plan's simulated time is within 10% of the grid-best."""
+
+    @pytest.mark.parametrize(
+        "params", SPECS["autotune"].points("smoke"),
+        ids=lambda p: f"T{p['n_threads']}-{p['workload']}")
+    def test_smoke_grid_regret_within_10_percent(self, params):
+        metrics = run_autotune(params)
+        assert metrics["regret"] <= 1.10, metrics
+        # the pick itself simulates no slower than the hand-picked
+        # default plan of the pre-planner sweeps
+        desc = autotune_desc(params)
+        default = pl.default_candidate(desc)
+        t_default, _ = pl.simulate_candidate(desc, default)
+        assert metrics["auto_time_us"] <= t_default / 1e-6 * 1.10
+
+    def test_grid_dedup_keeps_one_per_signature(self):
+        desc = pl.ScenarioDesc(total_bytes=float(1 << 20), n_threads=4)
+        cands = pl.candidate_grid(desc)
+        sigs = [pl._signature(desc, c) for c in cands]
+        assert len(sigs) == len(set(sigs))
+        # bounds respected
+        assert all(desc.n_threads * c.theta <= desc.max_parts
+                   for c in cands)
+        assert all(c.n_vcis <= desc.max_vcis for c in cands)
+
+
+class TestPlanAutoThreading:
+    """plan_auto and its consumers build coherent plans from the choice."""
+
+    def test_plan_auto_uniform_matches_choice(self):
+        plan, choice = commplan.plan_auto(float(4 << 20), n_threads=4,
+                                          workload=pm.FFT)
+        assert choice.approach == "part"
+        assert plan.n_items == 4 * choice.theta
+        assert plan.n_channels_used <= choice.n_vcis
+
+    def test_plan_auto_sized(self):
+        sizes = [100_000.0] * 37
+        plan, choice = commplan.plan_auto(sizes=sizes)
+        assert plan.n_items == 37
+        assert plan.total_bytes == sum(sizes)
+
+    def test_plan_auto_argument_validation(self):
+        with pytest.raises(ValueError):
+            commplan.plan_auto()
+        with pytest.raises(ValueError):
+            commplan.plan_auto(1024.0, sizes=[1.0])
+
+    def test_partitioned_request_auto(self):
+        req = PartitionedRequest.auto(float(4 << 20), n_threads=4,
+                                      workload=pm.STENCIL)
+        assert req.choice is not None
+        assert req.n_send_parts == 4 * req.choice.theta
+        assert req.n_messages == req.plan.n_messages
+        # a hand-built request records no choice
+        assert PartitionedRequest(8, 8, 1024.0).choice is None

@@ -5,11 +5,18 @@
   python -m benchmarks.sweep --smoke --check BENCH_scenarios.json
   python -m benchmarks.sweep --update BENCH_scenarios.json   # regenerate
   python -m benchmarks.sweep --full --engine reference       # scalar oracle
+  python -m benchmarks.sweep --full --engine jax     # XLA-compiled engine
   python -m benchmarks.sweep --full --cache .sweep_cache.json  # reuse runs
   python -m benchmarks.sweep --bench-engine --smoke \\
+      --bench-engines vector,reference \\
       --bench-check BENCH_engine.json                 # throughput gate (CI)
-  python -m benchmarks.sweep --bench-engine --full \\
-      --bench-out BENCH_engine.json                   # regenerate throughput
+  JAX_ENABLE_X64=1 python -m benchmarks.sweep --bench-engine --smoke \\
+      --bench-engines vector,jax \\
+      --bench-check BENCH_engine.json                 # jax gate (CI)
+  JAX_ENABLE_X64=1 python -m benchmarks.sweep --bench-engine --full \\
+      --bench-out BENCH_engine.json   # regenerate throughput (x64: the
+      #                                 jax cells must match the CI gate's
+      #                                 precision mode)
   python -m benchmarks.sweep --profile --specs weak_scaling  # cProfile top-N
 
 ``--check`` diffs the fresh results against a committed golden baseline
@@ -24,15 +31,17 @@ re-run nothing.
 
 ``--bench-engine`` measures engine throughput instead of checking
 records (it cannot be combined with the record-checking flags): per spec
-and per engine it reports wall time and events/sec (wire messages
-simulated per second of engine wall time) and writes the document to
-``--bench-out`` when given.  ``--bench-check`` gates against a committed
-``BENCH_engine.json``: the compared quantity is each spec's
-vector-vs-reference speedup — both engines are measured in the same run
-on the same machine, so the ratio is hardware-independent — and a >2x
-relative slowdown fails.  The Fig-5/Fig-6 contention crossover (part/many
-~ single at 32 VCIs, >> single at 1 VCI) is printed whenever the fig6
-spec ran.
+and per engine (``--bench-engines`` restricts the set) it reports wall
+time and events/sec (wire messages simulated per second of engine wall
+time) and writes the document to ``--bench-out`` when given.
+``--bench-check`` gates against a committed ``BENCH_engine.json``: the
+compared quantities are the per-spec speedups of each ``BENCH_PAIRS``
+engine pair (vector-vs-reference and jax-vs-vector) — both engines of a
+pair are measured in the same run on the same machine, so the ratio is
+hardware-independent — and a >2x relative slowdown fails; only pairs
+whose engines were both measured in this run are gated.  The Fig-5/Fig-6
+contention crossover (part/many ~ single at 32 VCIs, >> single at 1 VCI)
+is printed whenever the fig6 spec ran.
 """
 
 from __future__ import annotations
@@ -48,8 +57,12 @@ from repro.experiments import (SPECS, compare_to_baseline,
                                save_disk_cache)
 from repro.experiments import engine as _engine_mod
 
-BENCH_ENGINES = ("vector", "reference")
+BENCH_ENGINES = ("vector", "reference", "jax")
 BENCH_VERSION = 1
+# Engine pairs whose same-job throughput ratio the regression gate
+# tracks: (numerator, denominator).  Both engines of a pair run in the
+# same process on the same machine, so the ratio is hardware-independent.
+BENCH_PAIRS = (("vector", "reference"), ("jax", "vector"))
 # Runners excluded from --bench-engine: the autotune runner re-simulates
 # a whole candidate grid of mostly tiny (scalar-path) scenarios per
 # record, so its wall time measures planner overhead, not fabric
@@ -81,9 +94,10 @@ def _parse_args(argv):
     ap.add_argument("--jobs", type=int, default=1,
                     help="process-pool width for scenario runs")
     ap.add_argument("--engine", default="vector",
-                    choices=("vector", "reference"),
-                    help="fabric engine (vector = batched, reference ="
-                         " scalar oracle)")
+                    choices=("vector", "reference", "jax"),
+                    help="fabric engine (vector = batched NumPy,"
+                         " reference = scalar oracle, jax = XLA-compiled"
+                         " with the vmapped whole-grid path)")
     ap.add_argument("--cache", default="",
                     help="persistent JSON run cache: load before running,"
                          " save after (opt-in)")
@@ -95,7 +109,12 @@ def _parse_args(argv):
                     help="run full grids and (re)write this baseline JSON")
     ap.add_argument("--bench-engine", action="store_true",
                     help="measure engine throughput (events/sec + wall time"
-                         " per spec, both engines) instead of records")
+                         " per spec and engine) instead of records")
+    ap.add_argument("--bench-engines", default=",".join(BENCH_ENGINES),
+                    help="comma-separated engines to measure with"
+                         " --bench-engine (CI steps restrict this so the"
+                         " vector/reference and jax/vector gates each"
+                         " measure only their own pair)")
     ap.add_argument("--bench-out", default="",
                     help="write the throughput document to this path"
                          " (omit to measure/check without writing)")
@@ -144,18 +163,19 @@ def _bench_entry(spec, mode: str, engine: str, repeats: int = 3) -> dict:
     }
 
 
-def run_bench_engine(specs, mode: str) -> dict:
+def run_bench_engine(specs, mode: str,
+                     engines=BENCH_ENGINES) -> dict:
     """Throughput document: every (spec, engine) cell.
 
     Smoke runs measure the smoke grids only (the CI gate); full runs
     measure both modes so the committed document carries reference
     entries for either kind of later check.  Totals (and the printed
-    speedup) are over the full-grid entries when present.
+    speedups) are over the full-grid entries when present.
     """
     modes = ("smoke",) if mode == "smoke" else ("smoke", "full")
     entries = []
     for m in modes:
-        for engine in BENCH_ENGINES:
+        for engine in engines:
             for spec in specs:
                 e = _bench_entry(spec, m, engine)
                 entries.append(e)
@@ -164,30 +184,42 @@ def run_bench_engine(specs, mode: str) -> dict:
                       f"  {e['events_per_sec'] / 1e3:9.1f} kev/s")
     totals = {}
     total_mode = modes[-1]
-    for engine in BENCH_ENGINES:
+    for engine in engines:
         es = [e for e in entries
               if e["engine"] == engine and e["mode"] == total_mode]
         totals[engine] = {"wall_s": sum(e["wall_s"] for e in es),
                           "events": sum(e["events"] for e in es)}
-    if totals["vector"]["wall_s"] > 0:
-        speedup = totals["reference"]["wall_s"] / totals["vector"]["wall_s"]
-        totals["speedup_vector_vs_reference"] = speedup
-        print(f"# bench total ({total_mode}): reference"
-              f" {totals['reference']['wall_s']:.3f}s vs vector"
-              f" {totals['vector']['wall_s']:.3f}s ({speedup:.1f}x)")
+    for num, den in BENCH_PAIRS:
+        if num not in totals or den not in totals \
+                or totals[num]["wall_s"] <= 0:
+            continue
+        speedup = totals[den]["wall_s"] / totals[num]["wall_s"]
+        totals[f"speedup_{num}_vs_{den}"] = speedup
+        print(f"# bench total ({total_mode}): {den}"
+              f" {totals[den]['wall_s']:.3f}s vs {num}"
+              f" {totals[num]['wall_s']:.3f}s ({speedup:.1f}x)")
     _engine_mod._CACHE.clear()  # leave no half-measured state behind
-    return {"version": BENCH_VERSION, "mode": mode, "entries": entries,
-            "totals": totals}
+    doc = {"version": BENCH_VERSION, "mode": mode, "entries": entries,
+           "totals": totals}
+    if "jax" in engines:
+        # record the precision mode: jax float64 vs float32 throughput
+        # differs, so a gate should compare like against like (the
+        # committed document and the CI jax gate both run under
+        # JAX_ENABLE_X64=1)
+        from repro.compat import x64_enabled
+        doc["jax_enable_x64"] = x64_enabled()
+    return doc
 
 
-def _speedup_by_spec(doc: dict, mode: str) -> dict:
-    """Per-spec vector-vs-reference events/sec ratio for one mode."""
+def _speedup_by_spec(doc: dict, mode: str, num: str = "vector",
+                     den: str = "reference") -> dict:
+    """Per-spec ``num``-vs-``den`` events/sec ratio for one mode."""
     cells = {(e["spec"], e["engine"]): e for e in doc.get("entries", [])
              if e.get("mode") == mode}
     out = {}
     for (spec, engine), e in cells.items():
-        ref = cells.get((spec, "reference"))
-        if engine != "vector" or ref is None \
+        ref = cells.get((spec, den))
+        if engine != num or ref is None \
                 or min(e["events"], ref["events"]) < BENCH_MIN_EVENTS \
                 or ref["events_per_sec"] <= 0:
             continue
@@ -196,27 +228,31 @@ def _speedup_by_spec(doc: dict, mode: str) -> dict:
 
 
 def check_bench_regression(doc: dict, ref: dict) -> list:
-    """>2x regressions of the vector engine's per-spec speedup.
+    """>2x regressions of any engine pair's per-spec speedup.
 
-    Both documents carry each spec's vector *and* reference throughput
-    measured on the same machine in the same run, so the compared
-    quantity — the vector/reference events-per-second ratio — is
-    hardware-independent: a slower CI runner slows both engines alike,
-    while a vectorized-engine code regression shows up directly.  Specs
-    under ``BENCH_MIN_EVENTS`` events are timer noise and exempt.
+    Both documents carry each spec's throughput for the engines of a
+    :data:`BENCH_PAIRS` pair measured on the same machine in the same
+    run, so the compared quantity — the pair's events-per-second
+    ratio — is hardware-independent: a slower CI runner slows both
+    engines alike, while an engine code regression shows up directly.
+    A pair is only gated when the fresh document measured both of its
+    engines (CI's vector/reference and jax/vector steps each restrict
+    ``--bench-engines`` to their own pair); specs under
+    ``BENCH_MIN_EVENTS`` events are timer noise and exempt.
     """
     violations = []
-    for mode in ("smoke", "full"):
-        measured = _speedup_by_spec(doc, mode)
-        committed = _speedup_by_spec(ref, mode)
-        for spec, want in committed.items():
-            have = measured.get(spec)
-            if have is not None \
-                    and have * BENCH_REGRESSION_FACTOR < want:
-                violations.append(
-                    f"{spec}/{mode}: vector engine {have:.2f}x the scalar"
-                    f" oracle vs committed {want:.2f}x"
-                    f" (>{BENCH_REGRESSION_FACTOR}x relative slowdown)")
+    for num, den in BENCH_PAIRS:
+        for mode in ("smoke", "full"):
+            measured = _speedup_by_spec(doc, mode, num, den)
+            committed = _speedup_by_spec(ref, mode, num, den)
+            for spec, want in committed.items():
+                have = measured.get(spec)
+                if have is not None \
+                        and have * BENCH_REGRESSION_FACTOR < want:
+                    violations.append(
+                        f"{spec}/{mode}: {num} engine {have:.2f}x the"
+                        f" {den} engine vs committed {want:.2f}x"
+                        f" (>{BENCH_REGRESSION_FACTOR}x relative slowdown)")
     return violations
 
 
@@ -248,6 +284,13 @@ def main(argv=None) -> int:
                   f" combined with {', '.join('--' + f for f in clash)}",
                   file=sys.stderr)
             return 2
+        engines = tuple(e.strip() for e in args.bench_engines.split(",")
+                        if e.strip())
+        unknown = [e for e in engines if e not in BENCH_ENGINES]
+        if unknown:
+            print(f"unknown --bench-engines {unknown};"
+                  f" have {list(BENCH_ENGINES)}", file=sys.stderr)
+            return 2
         skipped = [s.name for s in specs
                    if s.runner in BENCH_EXCLUDED_RUNNERS]
         if skipped:
@@ -255,7 +298,7 @@ def main(argv=None) -> int:
                   " planner overhead, not fabric throughput)",
                   file=sys.stderr)
         specs = [s for s in specs if s.runner not in BENCH_EXCLUDED_RUNNERS]
-        doc = run_bench_engine(specs, mode)
+        doc = run_bench_engine(specs, mode, engines)
         if args.bench_check:
             try:
                 with open(args.bench_check) as f:
@@ -289,18 +332,44 @@ def main(argv=None) -> int:
     profiler = None
     if args.profile:
         import cProfile
+        from repro.core import simulator as _sim
+        _sim.clear_merge_memo()
         profiler = cProfile.Profile()
+        t_cold = time.perf_counter()
         profiler.enable()
     results = run_specs(specs, mode=mode, jobs=args.jobs,
                         engine=args.engine)
     if profiler is not None:
+        t_cold = time.perf_counter() - t_cold
+        # second pass: the record cache is cleared so every scenario
+        # really re-runs, but the hoisted merge-sort / stage-layout
+        # memos are warm — the wall delta is what the memoization buys
+        # repeated evaluations (benchmark repeats, steady re-runs)
+        _engine_mod._CACHE.clear()
+        t_warm = time.perf_counter()
+        run_specs(specs, mode=mode, jobs=args.jobs, engine=args.engine)
+        t_warm = time.perf_counter() - t_warm
         import pstats
         profiler.disable()
         stats = pstats.Stats(profiler, stream=sys.stderr)
         stats.strip_dirs().sort_stats("cumulative")
-        print(f"# cProfile, top {args.profile_top} by cumulative time:",
-              file=sys.stderr)
+        print(f"# cProfile, top {args.profile_top} by cumulative time"
+              " (both passes):", file=sys.stderr)
         stats.print_stats(args.profile_top)
+        st = _sim.merge_memo_stats()
+        print(f"# merge-layout memo: pass 1 (cold) {t_cold:.3f}s ->"
+              f" pass 2 (warm) {t_warm:.3f}s;"
+              f" {st['hits']} hits, {st['misses']} misses,"
+              f" {st['messages_saved']} message re-sorts avoided",
+              file=sys.stderr)
+        if args.engine == "jax":
+            from repro.core import fabric_jax as _fj
+            gst = _sim.grid_memo_stats()
+            lst = _fj.layout_memo_stats()
+            print(f"# jax grid-point memo: {gst['hits']} hits,"
+                  f" {gst['misses']} misses; stage-layout memo:"
+                  f" {lst['hits']} hits, {lst['misses']} misses",
+                  file=sys.stderr)
     for name, recs in results.items():
         print(f"# {name}: {len(recs)} records ({mode}, {args.engine})")
 

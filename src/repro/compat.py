@@ -5,11 +5,54 @@ in newer JAX; older releases ship it as
 ``jax.experimental.shard_map.shard_map`` with ``check_rep`` and an ``auto``
 set (the complement of the manual axes).  Everything in this repo imports
 it from here so both spellings work.
+
+This module also owns the **x64 guard** for the compiled fabric engine
+(:mod:`repro.core.fabric_jax`): under ``JAX_ENABLE_X64`` the jax engine
+computes in float64 and is bit-for-bit identical to the scalar
+``ReferenceFabric``; under the float32 default it is tolerance-gated
+only.  :func:`x64_enabled` reports the active mode and :func:`x64_mode`
+forces one for a scope (the differential tests exercise both).
 """
 
 from __future__ import annotations
 
+import contextlib
+
 import jax
+
+
+def x64_enabled() -> bool:
+    """True when jax computes in float64 (``JAX_ENABLE_X64`` / config).
+
+    This is the jax engine's precision contract switch: x64 means
+    bit-for-bit equality with ``ReferenceFabric``; float32 means results
+    are only tolerance-close (~1e-4 relative on arrival times).
+    """
+    return bool(jax.config.read("jax_enable_x64"))
+
+
+def x64_mode(enable: bool):
+    """Context manager forcing x64 on or off for a scope.
+
+    Uses ``jax.experimental.enable_x64/disable_x64`` where available
+    (jit caches are config-keyed, so toggling mid-process is safe);
+    falls back to flipping the config flag directly.
+    """
+    exp = jax.experimental
+    if enable and hasattr(exp, "enable_x64"):
+        return exp.enable_x64()
+    if not enable and hasattr(exp, "disable_x64"):
+        return exp.disable_x64()
+
+    @contextlib.contextmanager
+    def _flip():
+        prev = x64_enabled()
+        jax.config.update("jax_enable_x64", enable)
+        try:
+            yield
+        finally:
+            jax.config.update("jax_enable_x64", prev)
+    return _flip()
 
 
 def axis_size(axis_name):

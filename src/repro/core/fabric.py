@@ -189,6 +189,46 @@ class ReferenceFabric:
         return t3 + cfg.alpha_wire + cfg.alpha_recv
 
 
+class CappedMemo:
+    """Tiny process-level memo shared by the engines' layout caches: a
+    dict with a size cap (clear-all on overflow — every entry is a pure
+    recomputable function of its key) and hit/miss counters.  A ``None``
+    key disables memoization for that call."""
+
+    def __init__(self, cap: int):
+        self.cap = cap
+        self._d: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key):
+        if key is None:
+            return None
+        value = self._d.get(key)
+        if value is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return value
+
+    def put(self, key, value) -> None:
+        if key is None:
+            return
+        if len(self._d) >= self.cap:
+            self._d.clear()
+        self._d[key] = value
+
+    def clear(self) -> None:
+        self._d.clear()
+        self.hits = self.misses = 0
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses}
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+
 def _group_layout(gid: np.ndarray):
     """Group a batch by resource id, preserving in-group processing order.
 
@@ -255,13 +295,16 @@ class Fabric(ReferenceFabric):
     def transmit_arrays(self, t_ready: np.ndarray, nbytes: np.ndarray,
                         vci: np.ndarray, thread: np.ndarray,
                         put: np.ndarray, am_copy: np.ndarray,
-                        src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+                        src: np.ndarray, dst: np.ndarray, *,
+                        layout_key=None) -> np.ndarray:
         """Advance a whole traffic batch through the three stages.
 
         Rows must already be in global processing order (the caller merges
         flows by ``t_ready`` with a stable sort, exactly as the scalar
         ``_run_flows`` does).  Returns per-message receiver arrival times
-        in the same row order.
+        in the same row order.  ``layout_key`` is accepted for engine
+        interchangeability (the jax engine memoizes its stage layouts
+        under it); this engine recomputes groupings per call.
         """
         n = t_ready.shape[0]
         if n == 0:

@@ -66,17 +66,17 @@ Calibration targets (validated in tests/test_simulator.py):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .fabric import (US, DEFAULT_NET, Fabric, IntentBatch, NetConfig,
-                     ReferenceFabric)
+from .fabric import (US, DEFAULT_NET, CappedMemo, Fabric, IntentBatch,
+                     NetConfig, ReferenceFabric)
 from .partition import PartitionedRequest
 from .topology import CartTopology, HaloSpec
 
 # The fabric engines selectable via the drivers' ``engine`` argument.
-ENGINES = ("vector", "reference")
+ENGINES = ("vector", "reference", "jax")
 
 # Backward-compatible alias: the scalar fabric used to live here.
 _Fabric = ReferenceFabric
@@ -88,6 +88,9 @@ def _make_fabric(engine: str, cfg: NetConfig, n_vcis: int,
         return Fabric(cfg, n_vcis, n_ranks=n_ranks)
     if engine == "reference":
         return ReferenceFabric(cfg, n_vcis, n_ranks=n_ranks)
+    if engine == "jax":
+        from . import fabric_jax  # lazy: keeps the NumPy path jax-free
+        return fabric_jax.JaxFabric(cfg, n_vcis, n_ranks=n_ranks)
     raise ValueError(f"unknown engine {engine!r}; one of {ENGINES}")
 
 
@@ -290,10 +293,14 @@ class PartitionedSchedule(Schedule):
     def finish_batch(self, flows: Sequence[Scenario], fab,
                      flow_max: np.ndarray) -> np.ndarray:
         barriers: Dict[tuple, float] = {}
-        return flow_max + np.array(
-            [barriers.setdefault((id(sc.cfg), sc.n_threads),
-                                 sc.cfg.barrier(sc.n_threads))
-             for sc in flows])
+        barr = np.empty(len(flows))
+        for i, sc in enumerate(flows):
+            key = (id(sc.cfg), sc.n_threads)
+            b = barriers.get(key)
+            if b is None:  # lazily: setdefault would re-derive the
+                b = barriers[key] = sc.cfg.barrier(sc.n_threads)  # log2
+            barr[i] = b    # per flow even on memo hits
+        return flow_max + barr
 
     def n_requests(self, sc: Scenario) -> int:
         return sc.request().n_messages
@@ -638,11 +645,73 @@ def _scenario_class_key(sc: Scenario) -> tuple:
             sc.aggr_bytes, sc.t0, id(sc.cfg), sc.ready.tobytes())
 
 
+# Process-wide merge-layout memo: the stable argsort permutation of a
+# multi-flow merge is a pure function of the flows' intent classes and
+# endpoints, so re-running an identical merge (benchmark repeats,
+# smoke-vs-full shared points, repeated scenario evaluations) skips the
+# O(n log n) re-sort entirely.  Keys embed every scenario parameter that
+# shapes the columns — including the NetConfig *values*, so recycled
+# object ids can never alias two different configurations.
+_MERGE_MEMO = CappedMemo(64)
+_MERGE_MESSAGES_SAVED = [0]
+
+
+def merge_memo_stats() -> dict:
+    """Hit/miss counters of the merge-order memo (``sweep --profile``
+    prints these to show what repeated runs stopped re-sorting)."""
+    return {**_MERGE_MEMO.stats(),
+            "messages_saved": _MERGE_MESSAGES_SAVED[0]}
+
+
+def clear_merge_memo() -> None:
+    """Reset the merge-order, assembled-grid-point and (when the jax
+    engine is loaded) stage-layout/bucket memos with their counters —
+    `sweep --profile` calls this so its cold pass is cold."""
+    import sys
+    _MERGE_MEMO.clear()
+    _MERGE_MESSAGES_SAVED[0] = 0
+    _GRID_MEMO.clear()
+    fj = sys.modules.get("repro.core.fabric_jax")
+    if fj is not None:
+        fj.clear_layout_memo()
+
+
+def _merge_order(t_ready: np.ndarray,
+                 memo_key: Optional[tuple]) -> np.ndarray:
+    """The merge's stable sort permutation, memoized per merge key."""
+    order = _MERGE_MEMO.get(memo_key)
+    if order is not None:
+        _MERGE_MESSAGES_SAVED[0] += int(order.shape[0])
+        return order
+    order = np.argsort(t_ready, kind="stable")
+    _MERGE_MEMO.put(memo_key, order)
+    return order
+
+
+def _flows_memo_key(sched: Schedule, flows: Sequence[Scenario],
+                    srcs: np.ndarray, dsts: np.ndarray) -> tuple:
+    """Merge-memo key for a generic flow list.
+
+    Deliberately *not* built from ``Scenario.class_key``: driver-set
+    keys like ``(dim, rank)`` only disambiguate flows within one driver
+    call.  A process-level key must embed every parameter that shapes
+    the columns — per flow, NetConfig *values* included, so neither a
+    recycled ``id(cfg)`` nor a different cfg-to-flow assignment can
+    alias two merges.
+    """
+    fkeys = tuple((sc.n_threads, sc.theta, sc.part_bytes, sc.n_vcis,
+                   sc.aggr_bytes, sc.t0, sc.cfg, sc.ready.tobytes())
+                  for sc in flows)
+    return ("flows", sched.name, fkeys,
+            srcs.tobytes(), dsts.tobytes())
+
+
 def _merge_transmit(sched: Schedule, fab: Fabric,
                     flows: Sequence[Scenario], lens: np.ndarray,
                     t_ready: np.ndarray, nbytes: np.ndarray, vci: np.ndarray,
                     thread: np.ndarray, put: np.ndarray, am_copy: np.ndarray,
-                    src: np.ndarray, dst: np.ndarray
+                    src: np.ndarray, dst: np.ndarray,
+                    memo_key: Optional[tuple] = None
                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """The shared merge pipeline behind both batched flow paths.
 
@@ -651,15 +720,29 @@ def _merge_transmit(sched: Schedule, fab: Fabric,
     identical order, tie-breaks included, to the scalar event loop),
     runs the fabric once, and computes per-flow finish times.  Returns
     ``(finished, arrivals, starts)`` with arrivals back in flow-major
-    order.  This is the single bit-for-bit-critical copy of the merge:
-    ordering or finish fixes land here for every caller.
+    order.  ``memo_key`` (when the caller can name the merge's
+    equivalence class) reuses the hoisted argsort permutation and, on
+    the jax engine, the fabric's stage layouts.  This is the single
+    bit-for-bit-critical copy of the merge: ordering or finish fixes
+    land here for every caller.
     """
-    order = np.argsort(t_ready, kind="stable")
+    order = _merge_order(t_ready, memo_key)
     arr = fab.transmit_arrays(t_ready[order], nbytes[order], vci[order],
                               thread[order], put[order], am_copy[order],
-                              src[order], dst[order])
+                              src[order], dst[order], layout_key=memo_key)
     arrivals = np.empty_like(arr)
     arrivals[order] = arr
+    finished, starts = _finish_flows(sched, fab, flows, lens, arrivals)
+    return finished, arrivals, starts
+
+
+def _finish_flows(sched: Schedule, fab, flows: Sequence[Scenario],
+                  lens: np.ndarray, arrivals: np.ndarray
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-flow finish times from flow-major arrivals — the single copy
+    of the post-transmit arithmetic (flow-max reduction + finish) shared
+    by :func:`_merge_transmit` and the whole-grid path, so a finish fix
+    reaches every batched caller."""
     starts = np.zeros(len(flows), dtype=np.int64)
     np.cumsum(lens[:-1], out=starts[1:])
     flow_max = np.maximum.reduceat(arrivals, starts)
@@ -668,7 +751,7 @@ def _merge_transmit(sched: Schedule, fab: Fabric,
         finished = np.array(
             [sched.finish(sc, fab, arrivals[o:o + ln])
              for sc, o, ln in zip(flows, starts.tolist(), lens.tolist())])
-    return finished, arrivals, starts
+    return finished, starts
 
 
 def _run_flows_vector(sched: Schedule, fab: Fabric,
@@ -697,6 +780,8 @@ def _run_flows_vector(sched: Schedule, fab: Fabric,
             batches.append(batch)
     if flows:
         lens = np.array([len(b) for b in batches], dtype=np.int64)
+        srcs = np.array([sc.src for sc in flows], dtype=np.int64)
+        dsts = np.array([sc.dst for sc in flows], dtype=np.int64)
         finished, _, _ = _merge_transmit(
             sched, fab, flows, lens,
             np.concatenate([b.t_ready for b in batches]),
@@ -705,10 +790,8 @@ def _run_flows_vector(sched: Schedule, fab: Fabric,
             np.concatenate([b.thread for b in batches]),
             np.concatenate([b.put for b in batches]),
             np.concatenate([b.am_copy for b in batches]),
-            np.repeat(np.array([sc.src for sc in flows], dtype=np.int64),
-                      lens),
-            np.repeat(np.array([sc.dst for sc in flows], dtype=np.int64),
-                      lens))
+            np.repeat(srcs, lens), np.repeat(dsts, lens),
+            memo_key=_flows_memo_key(sched, flows, srcs, dsts))
         for sc, t in zip(flows, finished.tolist()):
             incoming[sc.dst].append(t)
     return incoming
@@ -722,23 +805,23 @@ def _run_flows(sched: Schedule, fab,
     return _run_flows_reference(sched, fab, scenarios)
 
 
-def _run_flows_classes(sched: Schedule, fab: Fabric,
-                       templates: Sequence[Scenario],
-                       class_idx: np.ndarray, srcs: np.ndarray,
-                       dsts: np.ndarray) -> Optional[np.ndarray]:
-    """Class-based fast path for many flows drawn from few intent classes.
+def _assemble_classes(sched: Schedule, templates: Sequence[Scenario],
+                      class_idx: np.ndarray, srcs: np.ndarray,
+                      dsts: np.ndarray
+                      ) -> Optional[Tuple[List[Scenario], np.ndarray,
+                                          Dict[str, np.ndarray], tuple]]:
+    """Assemble flow-major merged columns for class-stamped flows.
 
     ``class_idx[i]`` names the template scenario flow i is an endpoint
     re-stamp of.  Intent batches are built once per class; the merged
     columns are assembled by vectorized gathers instead of per-flow
     Python objects, so a 512-rank stencil (3072 flows) costs a handful
-    of array ops on top of the fabric scan.  Returns per-rank completion
-    times, or None when the schedule has dependent traffic (the caller
-    then takes the generic per-scenario path).  Bit-for-bit equal to
-    :func:`_run_flows_reference`: same concatenation order, same stable
-    merge, same finish arithmetic.
+    of array ops.  Returns ``(flows, lens, cols, memo_key)`` — flows are
+    template references (enough for the uniform ``finish_batch``) — or
+    None when the schedule has dependent traffic or a custom per-flow
+    finish (the caller then takes the generic per-scenario path).
     """
-    if sched.finish_batch([], fab, np.empty(0)) is None:
+    if sched.finish_batch([], None, np.empty(0)) is None:
         return None  # custom per-flow finish: needs real endpoint pairs
     batches = [sched.intent_batch(t) for t in templates]
     if any(b is None for b in batches):
@@ -755,15 +838,47 @@ def _run_flows_classes(sched: Schedule, fab: Fabric,
     gather = (np.repeat(class_ofs[class_idx] - flow_starts, lens)
               + np.arange(n, dtype=np.int64))
     flows = [templates[c] for c in class_idx.tolist()]
+    cols = {
+        "t_ready": np.concatenate([b.t_ready for b in batches])[gather],
+        "nbytes": np.concatenate([b.nbytes for b in batches])[gather],
+        "vci": np.concatenate([b.vci for b in batches])[gather],
+        "thread": np.concatenate([b.thread for b in batches])[gather],
+        "put": np.concatenate([b.put for b in batches])[gather],
+        "am_copy": np.concatenate([b.am_copy for b in batches])[gather],
+        "src": np.repeat(srcs, lens),
+        "dst": np.repeat(dsts, lens),
+    }
+    # per-template params with the NetConfig values inline: a different
+    # cfg-to-template assignment must never alias an earlier merge
+    memo_key = ("classes", sched.name,
+                tuple((t.n_threads, t.theta, t.part_bytes, t.n_vcis,
+                       t.aggr_bytes, t.t0, t.cfg, t.ready.tobytes())
+                      for t in templates),
+                class_idx.tobytes(), srcs.tobytes(), dsts.tobytes())
+    return flows, lens, cols, memo_key
+
+
+def _run_flows_classes(sched: Schedule, fab: Fabric,
+                       templates: Sequence[Scenario],
+                       class_idx: np.ndarray, srcs: np.ndarray,
+                       dsts: np.ndarray) -> Optional[np.ndarray]:
+    """Class-based fast path for many flows drawn from few intent classes.
+
+    Assembles the merged columns once (:func:`_assemble_classes`) and
+    runs the shared merge.  Returns per-rank completion times, or None
+    when the schedule cannot be class-batched.  Bit-for-bit equal to
+    :func:`_run_flows_reference`: same concatenation order, same stable
+    merge, same finish arithmetic.
+    """
+    asm = _assemble_classes(sched, templates, class_idx, srcs, dsts)
+    if asm is None:
+        return None
+    flows, lens, cols, memo_key = asm
     finished, _, _ = _merge_transmit(
         sched, fab, flows, lens,
-        np.concatenate([b.t_ready for b in batches])[gather],
-        np.concatenate([b.nbytes for b in batches])[gather],
-        np.concatenate([b.vci for b in batches])[gather],
-        np.concatenate([b.thread for b in batches])[gather],
-        np.concatenate([b.put for b in batches])[gather],
-        np.concatenate([b.am_copy for b in batches])[gather],
-        np.repeat(srcs, lens), np.repeat(dsts, lens))
+        cols["t_ready"], cols["nbytes"], cols["vci"], cols["thread"],
+        cols["put"], cols["am_copy"], cols["src"], cols["dst"],
+        memo_key=memo_key)
     rank_tts = np.zeros(fab.n_ranks)
     np.maximum.at(rank_tts, dsts, finished)
     return rank_tts
@@ -863,6 +978,35 @@ def _normalize_rank_ready(n_ranks: int, n_threads: int, theta: int,
     return arr.reshape(n_ranks, n_threads, theta)
 
 
+def _stencil_setup(approach, *, dims, topo, periodic, theta, n_threads,
+                   local_shape, bytes_per_cell, halo_width, face_bytes,
+                   ready):
+    """Shared validation/derivation for the stencil paths: the topology,
+    per-dimension face sizes, schedule lookup, and the (broadcast) ready
+    table.  ``shared_ready`` is True when every rank shares one table —
+    one intent-equivalence class per dimension."""
+    if topo is None:
+        topo = CartTopology.create(dims, periodic)
+    if topo.n_ranks < 2:
+        raise ValueError("stencil exchange needs at least 2 ranks")
+    if face_bytes is None:
+        if local_shape is None:
+            raise ValueError("need local_shape (or explicit face_bytes)")
+        spec = HaloSpec.create(topo, local_shape, bytes_per_cell, halo_width)
+        face_bytes = spec.all_face_bytes()
+    else:
+        face_bytes = tuple(float(b) for b in face_bytes)
+        if len(face_bytes) != topo.n_dims:
+            raise ValueError("need one face size per dimension")
+    sched = _lookup(approach)
+    # Shared (or absent) ready tables mean one intent-equivalence class
+    # per dimension; per-rank tables refine that to (dimension, rank).
+    shared_ready = ready is None or \
+        np.asarray(ready).size == n_threads * theta
+    ready_arr = _normalize_rank_ready(topo.n_ranks, n_threads, theta, ready)
+    return topo, face_bytes, sched, shared_ready, ready_arr
+
+
 def simulate_stencil(approach: str, *, dims: Sequence[int] = (),
                      topo: Optional[CartTopology] = None,
                      periodic=True, theta: int, n_threads: int = 1,
@@ -888,26 +1032,12 @@ def simulate_stencil(approach: str, *, dims: Sequence[int] = (),
     ``ready`` is None, one (n_threads, theta) table applied to every rank,
     or (n_ranks, n_threads, theta) per-rank tables (load imbalance).
     """
-    if topo is None:
-        topo = CartTopology.create(dims, periodic)
-    if topo.n_ranks < 2:
-        raise ValueError("stencil exchange needs at least 2 ranks")
-    if face_bytes is None:
-        if local_shape is None:
-            raise ValueError("need local_shape (or explicit face_bytes)")
-        spec = HaloSpec.create(topo, local_shape, bytes_per_cell, halo_width)
-        face_bytes = spec.all_face_bytes()
-    else:
-        face_bytes = tuple(float(b) for b in face_bytes)
-        if len(face_bytes) != topo.n_dims:
-            raise ValueError("need one face size per dimension")
-    sched = _lookup(approach)
+    topo, face_bytes, sched, shared_ready, ready_arr = _stencil_setup(
+        approach, dims=dims, topo=topo, periodic=periodic, theta=theta,
+        n_threads=n_threads, local_shape=local_shape,
+        bytes_per_cell=bytes_per_cell, halo_width=halo_width,
+        face_bytes=face_bytes, ready=ready)
     fab = _make_fabric(engine, cfg, n_vcis, n_ranks=topo.n_ranks)
-    # Shared (or absent) ready tables mean one intent-equivalence class
-    # per dimension; per-rank tables refine that to (dimension, rank).
-    shared_ready = ready is None or \
-        np.asarray(ready).size == n_threads * theta
-    ready_arr = _normalize_rank_ready(topo.n_ranks, n_threads, theta, ready)
     compute = float(ready_arr.max())
     n_part = n_threads * theta
     srcs, dsts, fdims = topo.flow_arrays()
@@ -941,6 +1071,151 @@ def simulate_stencil(approach: str, *, dims: Sequence[int] = (),
                          sent_per_rank=list(fab.sent_per_rank),
                          time_s=tts - compute, tts_s=tts,
                          n_messages=fab.n_messages)
+
+
+# Assembled-and-sorted grid points, keyed by their full parameter set:
+# repeated whole-grid evaluations (benchmark repeats, shared smoke/full
+# points) skip re-assembly entirely and go straight to the jitted call.
+_GRID_MEMO = CappedMemo(32)
+
+
+def grid_memo_stats() -> dict:
+    """Hit/miss counters of the assembled-grid-point memo (the jax
+    whole-grid path's outermost cache; when it hits, the merge/layout
+    memos underneath are never even consulted)."""
+    return _GRID_MEMO.stats()
+
+
+@dataclass
+class _PreparedStencil:
+    """One stencil sweep point, assembled up to (but not including) the
+    fabric advance — the unit the vmapped whole-grid path stacks."""
+    approach: str
+    sched: Schedule
+    flows: List[Scenario]          # template refs per flow (finish_batch)
+    lens: np.ndarray               # per-flow wire-message counts
+    cols: Dict[str, np.ndarray]    # flow-major merged message columns
+    dsts: np.ndarray               # per-flow destination rank
+    n_ranks: int
+    n_vcis: int
+    cfg: NetConfig
+    compute: float
+    dims: tuple
+    periodic: tuple
+    face_bytes: tuple
+    memo_key: tuple
+
+
+def _prepare_stencil(approach: str, *, dims: Sequence[int] = (),
+                     topo: Optional[CartTopology] = None, periodic=True,
+                     theta: int, n_threads: int = 1,
+                     local_shape: Optional[Sequence[int]] = None,
+                     bytes_per_cell: float = 8.0, halo_width: int = 1,
+                     face_bytes: Optional[Sequence[float]] = None,
+                     ready=None, n_vcis: int = 1, aggr_bytes: float = 0.0,
+                     cfg: NetConfig = DEFAULT_NET
+                     ) -> Optional[_PreparedStencil]:
+    """Assemble one stencil point for the whole-grid path, or None when
+    it cannot be batched (per-rank ready tables, dependent traffic, or a
+    custom per-flow finish) — the caller then falls back to the
+    per-point drivers."""
+    topo, face_bytes, sched, shared_ready, ready_arr = _stencil_setup(
+        approach, dims=dims, topo=topo, periodic=periodic, theta=theta,
+        n_threads=n_threads, local_shape=local_shape,
+        bytes_per_cell=bytes_per_cell, halo_width=halo_width,
+        face_bytes=face_bytes, ready=ready)
+    if not shared_ready:
+        return None
+    n_part = n_threads * theta
+    srcs, dsts, fdims = topo.flow_arrays()
+    templates = [Scenario(n_threads=n_threads, theta=theta,
+                          part_bytes=face_bytes[d] / n_part,
+                          ready=ready_arr[0], n_vcis=n_vcis,
+                          aggr_bytes=aggr_bytes, cfg=cfg)
+                 for d in range(topo.n_dims)]
+    asm = _assemble_classes(sched, templates, fdims, srcs, dsts)
+    if asm is None:
+        return None
+    flows, lens, cols, memo_key = asm
+    return _PreparedStencil(
+        approach=approach, sched=sched, flows=flows, lens=lens, cols=cols,
+        dsts=dsts, n_ranks=topo.n_ranks, n_vcis=n_vcis, cfg=cfg,
+        compute=float(ready_arr.max()), dims=topo.dims,
+        periodic=topo.periodic, face_bytes=tuple(face_bytes),
+        memo_key=memo_key)
+
+
+def _finish_prepared(prep: _PreparedStencil,
+                     arrivals: np.ndarray) -> StencilResult:
+    """Reduce one grid point's flow-major arrival times to its result:
+    the same per-flow finish and per-rank max as the per-point driver
+    (via the shared :func:`_finish_flows`)."""
+    finished, _ = _finish_flows(prep.sched, None, prep.flows, prep.lens,
+                                arrivals)
+    rank_tts = np.zeros(prep.n_ranks)
+    np.maximum.at(rank_tts, prep.dsts, finished)
+    tts = float(rank_tts.max())
+    sent = np.bincount(prep.cols["src"], minlength=prep.n_ranks)
+    return StencilResult(
+        approach=prep.approach, dims=prep.dims, periodic=prep.periodic,
+        face_bytes=prep.face_bytes, rank_tts_s=rank_tts.tolist(),
+        sent_per_rank=sent.tolist(), time_s=tts - prep.compute, tts_s=tts,
+        n_messages=int(prep.lens.sum()))
+
+
+def simulate_stencil_grid(points: Sequence[Mapping]
+                          ) -> List[Optional[StencilResult]]:
+    """Evaluate many stencil sweep points as one vmapped jitted grid.
+
+    Each entry of ``points`` is a kwargs mapping for
+    :func:`simulate_stencil` (``approach`` included, ``engine`` absent —
+    this path *is* the jax engine).  Points are assembled into stamped
+    intent-batch tensors, merged with memoized sorts, and advanced by
+    :func:`repro.core.fabric_jax.transmit_grid` — the whole
+    (approach x theta x n_vcis x size) grid in a few XLA dispatches.
+    Returns one :class:`StencilResult` per point, with None for points
+    the batched path cannot evaluate (the caller falls back to
+    :func:`simulate_stencil`).  Bit-for-bit identical to the per-point
+    engines under ``JAX_ENABLE_X64``; tolerance-close under float32.
+    """
+    from . import fabric_jax  # lazy: only the jax engine needs jax
+    prepared: List[Optional[tuple]] = []
+    for p in points:
+        try:  # hashable param sets reuse the assembled + sorted point
+            pkey = ("stencil-point", tuple(sorted(p.items())))
+            hash(pkey)
+        except TypeError:  # e.g. ndarray-valued ready tables
+            pkey = None
+        entry = _GRID_MEMO.get(pkey)
+        if entry is None:
+            prep = _prepare_stencil(**p)
+            if prep is None:
+                prepared.append(None)
+                continue
+            order = _merge_order(prep.cols["t_ready"], prep.memo_key)
+            c = prep.cols
+            item = fabric_jax.GridItem(
+                t_ready=c["t_ready"][order], nbytes=c["nbytes"][order],
+                vci=c["vci"][order], thread=c["thread"][order],
+                put=c["put"][order], am_copy=c["am_copy"][order],
+                src=c["src"][order], dst=c["dst"][order],
+                cfg=prep.cfg, n_vcis=prep.n_vcis, n_ranks=prep.n_ranks,
+                key=prep.memo_key)
+            entry = (prep, order, item)
+            _GRID_MEMO.put(pkey, entry)
+        prepared.append(entry)
+    items = [e[2] for e in prepared if e is not None]
+    results: List[Optional[StencilResult]] = [None] * len(prepared)
+    arrs = iter(fabric_jax.transmit_grid(items))
+    for i, entry in enumerate(prepared):
+        if entry is None:
+            continue
+        prep, order, _ = entry
+        sorted_arr = next(arrs)
+        arrivals = np.empty_like(sorted_arr)
+        arrivals[order] = sorted_arr
+        results[i] = _finish_prepared(prep, arrivals)
+    return results
 
 
 @dataclass

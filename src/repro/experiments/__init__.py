@@ -15,6 +15,6 @@ the repo root is the committed golden baseline checked in CI and by
 
 from .engine import (BASELINE_VERSION, DEFAULT_ENGINE, SweepSpec,  # noqa: F401
                      compare_to_baseline, load_disk_cache, make_baseline,
-                     record_key, run_records, run_spec, run_specs,
-                     save_disk_cache)
+                     record_key, run_records, run_records_batched,
+                     run_spec, run_specs, save_disk_cache)
 from .specs import SPECS, contention_crossover  # noqa: F401

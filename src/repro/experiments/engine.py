@@ -24,10 +24,13 @@ so changing a spec's constants invalidates its baseline records loudly
 (missing-key violations) instead of silently comparing different runs.
 
 Every entry point takes an ``engine`` argument (``"vector"`` — the
-batched fabric, the default — or ``"reference"`` — the scalar oracle);
-the engine is deliberately *not* part of the record key, because both
-engines must reproduce the same baseline records, but it does key the
-run caches so the two engines' results never alias.  The process-level
+batched NumPy fabric, the default — ``"reference"`` — the scalar
+oracle — or ``"jax"`` — the XLA-compiled fabric, whose stencil grids
+additionally take the whole-grid vmapped path of
+:func:`run_records_batched`); the engine is deliberately *not* part of
+the record key, because every engine must reproduce the same baseline
+records, but it does key the run caches so different engines' results
+never alias.  The process-level
 cache can additionally be persisted to an opt-in JSON file
 (:func:`load_disk_cache` / :func:`save_disk_cache`, wired to
 ``benchmarks.sweep --cache``), so a ``--check`` after an unrelated edit
@@ -38,6 +41,8 @@ from __future__ import annotations
 
 import itertools
 import json
+import os
+import tempfile
 from dataclasses import dataclass, field
 from typing import (Any, Dict, List, Mapping, Optional, Sequence, Tuple)
 
@@ -137,17 +142,7 @@ def run_halo(params: Mapping[str, Any],
 
 def run_stencil(params: Mapping[str, Any],
                 engine: str = DEFAULT_ENGINE) -> Dict[str, float]:
-    r = sim.simulate_stencil(params["approach"],
-                             dims=tuple(params["dims"]),
-                             periodic=params.get("periodic", True),
-                             theta=params.get("theta", 1),
-                             n_threads=params.get("n_threads", 1),
-                             local_shape=tuple(params["local_shape"]),
-                             bytes_per_cell=params.get("bytes_per_cell", 8.0),
-                             halo_width=params.get("halo_width", 1),
-                             n_vcis=params.get("n_vcis", 1),
-                             aggr_bytes=params.get("aggr_bytes", 0.0),
-                             engine=engine)
+    r = sim.simulate_stencil(engine=engine, **_stencil_sim_kwargs(params))
     return {"time_us": r.time_us, "n_messages": float(r.n_messages),
             "face_bytes_min": min(r.face_bytes),
             "face_bytes_max": max(r.face_bytes)}
@@ -286,6 +281,48 @@ class SweepSpec:
 _CACHE: Dict[Tuple[str, str, str], Dict[str, float]] = {}
 
 
+def _stencil_sim_kwargs(params: Mapping[str, Any]) -> Dict[str, Any]:
+    """A stencil sweep point's :func:`simulate_stencil` kwargs — shared
+    by the per-point runner and the whole-grid path so both evaluate the
+    identical scenario."""
+    return dict(approach=params["approach"],
+                dims=tuple(params["dims"]),
+                periodic=params.get("periodic", True),
+                theta=params.get("theta", 1),
+                n_threads=params.get("n_threads", 1),
+                local_shape=tuple(params["local_shape"]),
+                bytes_per_cell=params.get("bytes_per_cell", 8.0),
+                halo_width=params.get("halo_width", 1),
+                n_vcis=params.get("n_vcis", 1),
+                aggr_bytes=params.get("aggr_bytes", 0.0))
+
+
+def run_records_batched(runner: str, points: Sequence[Mapping[str, Any]],
+                        engine: str = "jax"
+                        ) -> Optional[List[Optional[Dict[str, float]]]]:
+    """Whole-grid evaluation: every sweep point in one vmapped jit call.
+
+    On the jax engine, stencil-runner grids stack all their points into
+    stamped intent-batch tensors and run through
+    :func:`repro.core.simulator.simulate_stencil_grid` — a few XLA
+    dispatches for the entire (approach x theta x n_vcis x size) grid
+    instead of one Python-driven fabric per record.  Returns one metrics
+    dict per point, with None for points the batched path cannot
+    evaluate (dependent-traffic schedules, per-rank ready tables) — the
+    caller runs those per point — or None wholesale when the
+    (runner, engine) pair has no batched path at all.
+    """
+    if engine != "jax" or runner != "stencil":
+        return None
+    results = sim.simulate_stencil_grid(
+        [_stencil_sim_kwargs(p) for p in points])
+    return [None if r is None else
+            {"time_us": r.time_us, "n_messages": float(r.n_messages),
+             "face_bytes_min": min(r.face_bytes),
+             "face_bytes_max": max(r.face_bytes)}
+            for r in results]
+
+
 def run_records(runner: str, points: Sequence[Mapping[str, Any]],
                 jobs: int = 1,
                 engine: str = DEFAULT_ENGINE) -> Dict[str, Dict[str, float]]:
@@ -295,6 +332,17 @@ def run_records(runner: str, points: Sequence[Mapping[str, Any]],
         keyed.setdefault(record_key(p), dict(p))
     missing = [(k, p) for k, p in keyed.items()
                if (runner, k, engine) not in _CACHE]
+    if missing:
+        batched = run_records_batched(runner, [p for _, p in missing],
+                                      engine=engine)
+        if batched is not None:
+            left = []
+            for (k, p), metrics in zip(missing, batched):
+                if metrics is None:
+                    left.append((k, p))
+                else:
+                    _CACHE[(runner, k, engine)] = metrics
+            missing = left
     if jobs > 1 and len(missing) > 1:
         from concurrent.futures import ProcessPoolExecutor
         with ProcessPoolExecutor(max_workers=jobs) as ex:
@@ -346,16 +394,35 @@ def load_disk_cache(path: str) -> int:
 
 
 def save_disk_cache(path: str) -> int:
-    """Write the process cache to ``path``; returns entries written."""
+    """Write the process cache to ``path``; returns entries written.
+
+    The write is **atomic**: the document lands in a temp file in the
+    target's directory and is ``os.replace``-d over ``path``, so a crash
+    (or a concurrent ``sweep --jobs N --cache`` run) can never leave a
+    truncated or interleaved cache behind — readers see either the old
+    complete file or the new complete file.
+    """
     records: Dict[str, Dict[str, Dict[str, Dict[str, float]]]] = {}
     for (runner, key, engine) in sorted(_CACHE,
                                         key=lambda k: (k[2], k[0], k[1])):
         records.setdefault(engine, {}).setdefault(runner, {})[key] = \
             _CACHE[(runner, key, engine)]
     doc = {"baseline_version": BASELINE_VERSION, "records": records}
-    with open(path, "w") as f:
-        json.dump(doc, f, indent=2, sort_keys=True)
-        f.write("\n")
+    path = os.path.abspath(path)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                               prefix=os.path.basename(path) + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
     return len(_CACHE)
 
 

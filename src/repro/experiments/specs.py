@@ -123,6 +123,20 @@ WEAK_SCALING = SweepSpec(
          " block (32 KiB faces); tractable only on the vectorized engine",
 )
 
+WEAK_SCALING_XL = SweepSpec(
+    name="weak_scaling_xl",
+    runner="stencil",
+    grid={"approach": _CONTENTION_APPROACHES,
+          "dims": ((8, 8, 8), (16, 8, 8), (16, 16, 8), (16, 16, 16))},
+    fixed={"local_shape": (64, 64, 64), "bytes_per_cell": 8.0, "theta": 4,
+           "n_threads": 2, "n_vcis": 2},
+    smoke={"approach": ("pt2pt_single", "part"), "dims": ((16, 16, 16),)},
+    baseline_approach="pt2pt_single",
+    note="XL weak scaling to a 4096-rank periodic torus (196k wire"
+         " messages per partitioned record); sized for the jax engine's"
+         " vmapped whole-grid path",
+)
+
 IMBALANCE = SweepSpec(
     name="imbalance",
     runner="imbalance",
@@ -155,7 +169,8 @@ AUTOTUNE = SweepSpec(
 
 SPECS: Dict[str, SweepSpec] = {
     s.name: s for s in (FIG4, FIG5, FIG6, FIG7, FIG8, STEADY, HALO1D,
-                        STENCIL3D, WEAK_SCALING, IMBALANCE, AUTOTUNE)
+                        STENCIL3D, WEAK_SCALING, WEAK_SCALING_XL,
+                        IMBALANCE, AUTOTUNE)
 }
 
 

@@ -156,6 +156,33 @@ class TestDiskCache:
             # never leak poisoned records into later tests
             engine_mod._CACHE.clear()
 
+    def test_save_is_atomic_crash_mid_write(self, tmp_path, monkeypatch):
+        """A crash mid-save must leave the previous cache file intact
+        (the document is written to a temp file and os.replace-d), so
+        concurrent `sweep --jobs N --cache` runs can never truncate or
+        corrupt each other's cache."""
+        path = tmp_path / "cache.json"
+        run_spec(SPECS["fig7_aggregation"], mode="smoke")
+        written = save_disk_cache(str(path))
+        assert written > 0
+        before = path.read_text()
+
+        def crash_mid_write(doc, f, **kw):
+            f.write('{"baseline_version":')  # partial bytes, then die
+            raise RuntimeError("simulated crash mid-write")
+
+        monkeypatch.setattr(engine_mod.json, "dump", crash_mid_write)
+        with pytest.raises(RuntimeError, match="mid-write"):
+            save_disk_cache(str(path))
+        monkeypatch.undo()
+        assert path.read_text() == before  # old file byte-identical
+        assert list(tmp_path.glob("*.tmp")) == []  # temp file cleaned up
+        engine_mod._CACHE.clear()
+        try:
+            assert load_disk_cache(str(path)) == written
+        finally:
+            engine_mod._CACHE.clear()
+
     def test_malformed_cache_file_is_ignored_wholesale(self, tmp_path):
         bad = tmp_path / "bad.json"
         bad.write_text(json.dumps({
@@ -198,7 +225,7 @@ class TestEngineThroughputBench:
     BENCH_PATH = BASELINE_PATH.parent / "BENCH_engine.json"
 
     def test_committed_document_shape(self):
-        from benchmarks.sweep import BENCH_EXCLUDED_RUNNERS
+        from benchmarks.sweep import BENCH_ENGINES, BENCH_EXCLUDED_RUNNERS
         doc = json.loads(self.BENCH_PATH.read_text())
         cells = {(e["spec"], e["engine"]) for e in doc["entries"]}
         for name, spec in SPECS.items():
@@ -207,13 +234,30 @@ class TestEngineThroughputBench:
                     f"{name} is bench-excluded; regenerate"
                     " BENCH_engine.json")
                 continue
-            assert (name, "vector") in cells and (name, "reference") in cells
+            for engine in BENCH_ENGINES:
+                assert (name, engine) in cells, (name, engine)
+        assert doc.get("jax_enable_x64") is True, (
+            "committed BENCH_engine.json must be measured under"
+            " JAX_ENABLE_X64=1 (the CI jax gate's precision mode)")
         speedup = doc["totals"]["speedup_vector_vs_reference"]
         assert speedup >= 5.0, (
             f"vectorized engine only {speedup:.1f}x faster than the scalar"
             " oracle on the full grids; regenerate BENCH_engine.json via"
-            " python -m benchmarks.sweep --bench-engine --full --bench-out"
-            " BENCH_engine.json")
+            " JAX_ENABLE_X64=1 python -m benchmarks.sweep --bench-engine"
+            " --full --bench-out BENCH_engine.json")
+
+    def test_committed_jax_grid_path_beats_vector_on_weak_scaling(self):
+        """Acceptance: the vmapped whole-grid path wins >=3x over the
+        vector engine's full-grid wall on the weak-scaling specs."""
+        doc = json.loads(self.BENCH_PATH.read_text())
+        cells = {(e["spec"], e["engine"]): e for e in doc["entries"]
+                 if e["mode"] == "full"}
+        for spec in ("weak_scaling", "weak_scaling_xl"):
+            jax_wall = cells[(spec, "jax")]["wall_s"]
+            vec_wall = cells[(spec, "vector")]["wall_s"]
+            assert vec_wall / jax_wall >= 3.0, (
+                f"{spec}: jax grid path only {vec_wall / jax_wall:.2f}x"
+                " the vector engine; regenerate BENCH_engine.json")
 
     @staticmethod
     def _doc(vector_eps, reference_eps, events=50000):

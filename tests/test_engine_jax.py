@@ -1,0 +1,241 @@
+"""Differential suite for the compiled fabric engine (``engine="jax"``).
+
+Mirrors ``tests/test_engine_diff.py`` for the third engine, across all
+five drivers and every approach, under both precision modes:
+
+* ``JAX_ENABLE_X64`` (forced via :func:`repro.compat.x64_mode`): the jax
+  engine must match the vectorized engine — and therefore the scalar
+  ``ReferenceFabric``, which the vector engine equals bit-for-bit —
+  **exactly**, no tolerance.  Cost constants enter the jit as dynamic
+  scalars precisely so XLA cannot rewrite ``x / beta`` and break this.
+* float32 (x64 off): the same graph runs in single precision and is
+  only tolerance-gated (~1e-4 relative on arrival times); structural
+  counters (``n_messages``, ``sent_per_rank``) stay exact.
+
+The whole-grid vmapped path (``simulate_stencil_grid`` /
+``run_records_batched``) is differentially tested against the per-point
+engines, and the 4096-rank ``weak_scaling_xl`` smoke tier must complete
+within its wall-time budget while reproducing the committed baseline.
+"""
+
+import json
+import pathlib
+import time
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro import compat  # noqa: E402
+from repro.core import fabric as fb  # noqa: E402
+from repro.core import perfmodel as pm  # noqa: E402
+from repro.core import simulator as sim  # noqa: E402
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # env without hypothesis: deterministic fallback
+    from _hypo import given, settings, st
+
+APPROACHES = sorted(sim.APPROACHES)
+PIPELINED = ("part", "part_old", "pt2pt_single", "pt2pt_many")
+
+# Relative tolerance of the float32 mode: single-precision rounding over
+# a few thousand serial queue updates stays well inside 1e-4 relative.
+F32_RTOL = 1e-4
+
+
+def _ready(n_threads, theta, seed):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0.0, 25e-6, size=(n_threads, theta))
+
+
+@pytest.fixture
+def forced_scans(monkeypatch):
+    """Route every batch through the staged scans, however narrow."""
+    monkeypatch.setattr(fb, "SCALAR_BATCH_CUTOFF", 0)
+    monkeypatch.setattr(fb, "MIN_GROUP_PARALLELISM", 0)
+
+
+def _assert_exact(rj, rv):
+    assert rj.n_messages == rv.n_messages
+    assert rj.time_s == rv.time_s  # bit-for-bit, no tolerance
+    assert rj.tts_s == rv.tts_s
+
+
+def _assert_close(rj, rv):
+    assert rj.n_messages == rv.n_messages
+    assert rj.tts_s == pytest.approx(rv.tts_s, rel=F32_RTOL)
+    # time_s subtracts compute from tts, so its tolerance is anchored to
+    # the tts magnitude, not its own (possibly tiny) value
+    assert abs(rj.time_s - rv.time_s) <= F32_RTOL * abs(rv.tts_s)
+
+
+class TestX64BitForBit:
+    """Under x64 the compiled scans equal the NumPy engines exactly."""
+
+    @pytest.mark.parametrize("ap", APPROACHES)
+    def test_stencil_all_approaches(self, ap, forced_scans):
+        with compat.x64_mode(True):
+            for dims, n, theta, vcis, seed in (
+                    ((2, 2), 1, 2, 1, 0), ((2, 2, 2), 2, 4, 2, 1)):
+                kw = dict(dims=dims, theta=theta, n_threads=n, n_vcis=vcis,
+                          local_shape=(24, 8, 4)[:len(dims)],
+                          ready=_ready(n, theta, seed))
+                rj = sim.simulate_stencil(ap, engine="jax", **kw)
+                rv = sim.simulate_stencil(ap, engine="vector", **kw)
+                assert rj.rank_tts_s == rv.rank_tts_s
+                assert rj.sent_per_rank == rv.sent_per_rank
+                _assert_exact(rj, rv)
+
+    @pytest.mark.parametrize("ap", APPROACHES)
+    def test_halo_all_approaches(self, ap, forced_scans):
+        with compat.x64_mode(True):
+            kw = dict(n_ranks=4, theta=4, part_bytes=4096, n_threads=2,
+                      n_vcis=2, ready=_ready(2, 4, 3))
+            rj = sim.simulate_halo(ap, engine="jax", **kw)
+            rv = sim.simulate_halo(ap, engine="vector", **kw)
+            assert rj.rank_tts_s == rv.rank_tts_s
+            _assert_exact(rj, rv)
+
+    @pytest.mark.parametrize("ap", APPROACHES)
+    def test_oneshot_and_steady(self, ap, forced_scans):
+        """Single-flow drivers (scalar path on every engine) still
+        thread engine='jax' end to end."""
+        with compat.x64_mode(True):
+            kw = dict(n_threads=2, theta=4, part_bytes=2048, n_vcis=2,
+                      ready=_ready(2, 4, 5))
+            _assert_exact(sim.simulate(ap, engine="jax", **kw),
+                          sim.simulate(ap, engine="vector", **kw))
+            rj = sim.simulate_steady_state(ap, n_iters=3, **kw,
+                                           engine="jax")
+            rv = sim.simulate_steady_state(ap, n_iters=3, **kw,
+                                           engine="vector")
+            assert rj.iter_times_s == rv.iter_times_s
+            assert rj.tts_s == rv.tts_s and rj.n_messages == rv.n_messages
+
+    @pytest.mark.parametrize("ap", PIPELINED[:2])
+    def test_imbalance(self, ap, forced_scans):
+        with compat.x64_mode(True):
+            kw = dict(n_ranks=4, workload=pm.WORKLOADS["stencil"], theta=2,
+                      part_bytes=1 << 18, n_threads=2, n_vcis=2, seed=7)
+            rj = sim.simulate_imbalance(ap, engine="jax", **kw)
+            rv = sim.simulate_imbalance(ap, engine="vector", **kw)
+            assert rj.rank_tts_s == rv.rank_tts_s
+            assert rj.mean_delay_s == rv.mean_delay_s
+            _assert_exact(rj, rv)
+
+    @given(ap=st.sampled_from(PIPELINED),
+           dims=st.sampled_from([(3, 2), (2, 2, 2)]),
+           theta=st.sampled_from([2, 4]), seed=st.integers(0, 2))
+    @settings(max_examples=10, deadline=None)
+    def test_stencil_randomized(self, ap, dims, theta, seed):
+        """Randomized scenarios through the staged scans (forced on)."""
+        kw = dict(dims=dims, theta=theta, n_threads=2, n_vcis=2,
+                  local_shape=(24, 8, 4)[:len(dims)],
+                  ready=_ready(2, theta, seed))
+        cutoff, par = fb.SCALAR_BATCH_CUTOFF, fb.MIN_GROUP_PARALLELISM
+        fb.SCALAR_BATCH_CUTOFF = fb.MIN_GROUP_PARALLELISM = 0
+        try:
+            with compat.x64_mode(True):
+                rj = sim.simulate_stencil(ap, engine="jax", **kw)
+        finally:
+            fb.SCALAR_BATCH_CUTOFF, fb.MIN_GROUP_PARALLELISM = cutoff, par
+        rv = sim.simulate_stencil(ap, engine="vector", **kw)
+        assert rj.rank_tts_s == rv.rank_tts_s
+        _assert_exact(rj, rv)
+
+    def test_wide_batch_takes_scans_unforced(self):
+        """A 512-rank torus engages the jitted scans through the normal
+        adaptive routing (no forcing) and still matches exactly."""
+        with compat.x64_mode(True):
+            kw = dict(dims=(8, 8, 8), theta=4, n_threads=2, n_vcis=2,
+                      local_shape=(64, 64, 64))
+            rj = sim.simulate_stencil("part", engine="jax", **kw)
+            rv = sim.simulate_stencil("part", engine="vector", **kw)
+            assert rj.rank_tts_s == rv.rank_tts_s
+            _assert_exact(rj, rv)
+
+
+class TestFloat32Tolerance:
+    """Without x64 the engine is tolerance-gated, counters stay exact."""
+
+    @pytest.mark.parametrize("ap", PIPELINED)
+    def test_stencil(self, ap, forced_scans):
+        with compat.x64_mode(False):
+            kw = dict(dims=(2, 2, 2), theta=4, n_threads=2, n_vcis=2,
+                      local_shape=(24, 8, 4), ready=_ready(2, 4, 11))
+            rj = sim.simulate_stencil(ap, engine="jax", **kw)
+        rv = sim.simulate_stencil(ap, engine="vector", **kw)
+        assert rj.sent_per_rank == rv.sent_per_rank
+        np.testing.assert_allclose(rj.rank_tts_s, rv.rank_tts_s,
+                                   rtol=F32_RTOL)
+        _assert_close(rj, rv)
+
+    def test_x64_guard_reports_mode(self):
+        with compat.x64_mode(True):
+            assert compat.x64_enabled()
+        with compat.x64_mode(False):
+            assert not compat.x64_enabled()
+
+
+class TestGridPath:
+    """The vmapped whole-grid path vs the per-point engines."""
+
+    POINTS = [dict(approach=ap, dims=d, theta=4, n_threads=2, n_vcis=2,
+                   local_shape=(64, 64, 64), bytes_per_cell=8.0)
+              for ap in ("pt2pt_single", "part", "pt2pt_many")
+              for d in ((2, 2, 2), (3, 2, 2))]
+
+    def test_grid_matches_per_point_x64(self):
+        with compat.x64_mode(True):
+            results = sim.simulate_stencil_grid(self.POINTS)
+            for p, r in zip(self.POINTS, results):
+                rv = sim.simulate_stencil(engine="vector", **p)
+                assert r is not None
+                assert r.rank_tts_s == rv.rank_tts_s
+                assert r.sent_per_rank == rv.sent_per_rank
+                assert r.face_bytes == rv.face_bytes
+                _assert_exact(r, rv)
+
+    def test_dependent_traffic_falls_back_to_none(self):
+        with compat.x64_mode(True):
+            pts = [dict(self.POINTS[0], approach="rma_many_passive")]
+            assert sim.simulate_stencil_grid(pts) == [None]
+
+    def test_run_records_batched(self):
+        """The experiments layer's batched records equal the per-point
+        runner's within the float32 tolerance (exact under x64)."""
+        from repro.experiments.engine import (run_records_batched,
+                                              run_stencil)
+        batched = run_records_batched("stencil", self.POINTS, engine="jax")
+        assert batched is not None and all(m is not None for m in batched)
+        for p, metrics in zip(self.POINTS, batched):
+            ref = run_stencil(p, engine="vector")
+            assert metrics["n_messages"] == ref["n_messages"]
+            assert metrics["time_us"] == pytest.approx(
+                ref["time_us"], rel=10 * F32_RTOL, abs=1e-9)
+
+    def test_batched_path_declines_other_runners(self):
+        from repro.experiments.engine import run_records_batched
+        assert run_records_batched("halo", [], engine="jax") is None
+        assert run_records_batched("stencil", [], engine="vector") is None
+
+
+class TestWeakScalingXL:
+    """Acceptance: the 4096-rank tier is tractable in tier-1."""
+
+    def test_4096_rank_smoke_under_budget(self):
+        from repro.experiments import SPECS, compare_to_baseline, run_spec
+        spec = SPECS["weak_scaling_xl"]
+        t0 = time.perf_counter()
+        results = run_spec(spec, mode="smoke", engine="jax")
+        wall = time.perf_counter() - t0
+        assert wall < 30.0, f"4096-rank smoke tier took {wall:.1f}s"
+        assert any("dims=16x16x16" in k for k in results)
+        baseline = json.loads(
+            (pathlib.Path(__file__).resolve().parent.parent /
+             "BENCH_scenarios.json").read_text())
+        violations = compare_to_baseline(
+            baseline, {"weak_scaling_xl": results})
+        assert not violations, "\n".join(violations)

@@ -13,6 +13,9 @@
   JAX_ENABLE_X64=1 python -m benchmarks.sweep --bench-engine --smoke \\
       --bench-engines vector,jax \\
       --bench-check BENCH_engine.json                 # jax gate (CI)
+  JAX_ENABLE_X64=1 python -m benchmarks.sweep --bench-engine --smoke \\
+      --bench-engines jax,pallas \\
+      --bench-check BENCH_engine.json                 # pallas gate (CI)
   JAX_ENABLE_X64=1 python -m benchmarks.sweep --bench-engine --full \\
       --bench-out BENCH_engine.json   # regenerate throughput (x64: the
       #                                 jax cells must match the CI gate's
@@ -36,10 +39,12 @@ time and events/sec (wire messages simulated per second of engine wall
 time) and writes the document to ``--bench-out`` when given.
 ``--bench-check`` gates against a committed ``BENCH_engine.json``: the
 compared quantities are the per-spec speedups of each ``BENCH_PAIRS``
-engine pair (vector-vs-reference and jax-vs-vector) — both engines of a
-pair are measured in the same run on the same machine, so the ratio is
-hardware-independent — and a >2x relative slowdown fails; only pairs
-whose engines were both measured in this run are gated.  The Fig-5/Fig-6
+engine pair (vector-vs-reference, jax-vs-vector and pallas-vs-jax) —
+both engines of a pair are measured in the same run on the same
+machine, so the ratio is hardware-independent — and a >2x relative
+slowdown fails; only pairs whose engines were both measured in this run
+are gated.  ``BENCH_SPEC_ENGINES`` restricts scalar-intractable grids
+(the 32k-rank XXL sweep) to the compiled engines.  The Fig-5/Fig-6
 contention crossover (part/many ~ single at 32 VCIs, >> single at 1 VCI)
 is printed whenever the fig6 spec ran.
 """
@@ -57,12 +62,20 @@ from repro.experiments import (SPECS, compare_to_baseline,
                                save_disk_cache)
 from repro.experiments import engine as _engine_mod
 
-BENCH_ENGINES = ("vector", "reference", "jax")
+BENCH_ENGINES = ("vector", "reference", "jax", "pallas")
 BENCH_VERSION = 1
 # Engine pairs whose same-job throughput ratio the regression gate
 # tracks: (numerator, denominator).  Both engines of a pair run in the
 # same process on the same machine, so the ratio is hardware-independent.
-BENCH_PAIRS = (("vector", "reference"), ("jax", "vector"))
+BENCH_PAIRS = (("vector", "reference"), ("jax", "vector"),
+               ("pallas", "jax"))
+# Specs whose grids are tractable only on a subset of the engines: the
+# 32k-rank XXL sweep takes minutes per record on the scalar/NumPy
+# engines, so its bench cells are measured on the compiled engines
+# only.  Pair speedups are summed over the specs where BOTH engines of
+# the pair have cells, so a skipped cell narrows a pair's coverage
+# instead of skewing its ratio.
+BENCH_SPEC_ENGINES = {"weak_scaling_xxl": ("jax", "pallas")}
 # Runners excluded from --bench-engine: the autotune runner re-simulates
 # a whole candidate grid of mostly tiny (scalar-path) scenarios per
 # record, so its wall time measures planner overhead, not fabric
@@ -94,10 +107,11 @@ def _parse_args(argv):
     ap.add_argument("--jobs", type=int, default=1,
                     help="process-pool width for scenario runs")
     ap.add_argument("--engine", default="vector",
-                    choices=("vector", "reference", "jax"),
+                    choices=("vector", "reference", "jax", "pallas"),
                     help="fabric engine (vector = batched NumPy,"
                          " reference = scalar oracle, jax = XLA-compiled"
-                         " with the vmapped whole-grid path)")
+                         " with the vmapped whole-grid path, pallas ="
+                         " fused single-kernel pipeline)")
     ap.add_argument("--cache", default="",
                     help="persistent JSON run cache: load before running,"
                          " save after (opt-in)")
@@ -177,6 +191,11 @@ def run_bench_engine(specs, mode: str,
     for m in modes:
         for engine in engines:
             for spec in specs:
+                allowed = BENCH_SPEC_ENGINES.get(spec.name, BENCH_ENGINES)
+                if engine not in allowed:
+                    print(f"# bench {spec.name:18s} {engine:9s} {m:5s} "
+                          f"   skipped (engines: {', '.join(allowed)})")
+                    continue
                 e = _bench_entry(spec, m, engine)
                 entries.append(e)
                 print(f"# bench {e['spec']:18s} {engine:9s} {m:5s} "
@@ -184,28 +203,36 @@ def run_bench_engine(specs, mode: str,
                       f"  {e['events_per_sec'] / 1e3:9.1f} kev/s")
     totals = {}
     total_mode = modes[-1]
+    cells = {(e["spec"], e["engine"]): e for e in entries
+             if e["mode"] == total_mode}
     for engine in engines:
         es = [e for e in entries
               if e["engine"] == engine and e["mode"] == total_mode]
         totals[engine] = {"wall_s": sum(e["wall_s"] for e in es),
                           "events": sum(e["events"] for e in es)}
     for num, den in BENCH_PAIRS:
-        if num not in totals or den not in totals \
-                or totals[num]["wall_s"] <= 0:
+        # sum over the specs both engines of the pair measured, so a
+        # BENCH_SPEC_ENGINES skip narrows coverage without skewing the
+        # ratio (per-engine totals above may span different spec sets)
+        common = [s.name for s in specs
+                  if (s.name, num) in cells and (s.name, den) in cells]
+        num_wall = sum(cells[(s, num)]["wall_s"] for s in common)
+        den_wall = sum(cells[(s, den)]["wall_s"] for s in common)
+        if not common or num_wall <= 0:
             continue
-        speedup = totals[den]["wall_s"] / totals[num]["wall_s"]
+        speedup = den_wall / num_wall
         totals[f"speedup_{num}_vs_{den}"] = speedup
-        print(f"# bench total ({total_mode}): {den}"
-              f" {totals[den]['wall_s']:.3f}s vs {num}"
-              f" {totals[num]['wall_s']:.3f}s ({speedup:.1f}x)")
+        print(f"# bench total ({total_mode}, {len(common)} specs): {den}"
+              f" {den_wall:.3f}s vs {num}"
+              f" {num_wall:.3f}s ({speedup:.1f}x)")
     _engine_mod._CACHE.clear()  # leave no half-measured state behind
     doc = {"version": BENCH_VERSION, "mode": mode, "entries": entries,
            "totals": totals}
-    if "jax" in engines:
-        # record the precision mode: jax float64 vs float32 throughput
-        # differs, so a gate should compare like against like (the
-        # committed document and the CI jax gate both run under
-        # JAX_ENABLE_X64=1)
+    if "jax" in engines or "pallas" in engines:
+        # record the precision mode: jax/pallas float64 vs float32
+        # throughput differs, so a gate should compare like against like
+        # (the committed document and the CI compiled-engine gates all
+        # run under JAX_ENABLE_X64=1)
         from repro.compat import x64_enabled
         doc["jax_enable_x64"] = x64_enabled()
     return doc
@@ -360,16 +387,25 @@ def main(argv=None) -> int:
         print(f"# merge-layout memo: pass 1 (cold) {t_cold:.3f}s ->"
               f" pass 2 (warm) {t_warm:.3f}s;"
               f" {st['hits']} hits, {st['misses']} misses,"
+              f" {st['evictions']} evictions,"
               f" {st['messages_saved']} message re-sorts avoided",
               file=sys.stderr)
-        if args.engine == "jax":
+        if args.engine in ("jax", "pallas"):
             from repro.core import fabric_jax as _fj
             gst = _sim.grid_memo_stats()
             lst = _fj.layout_memo_stats()
-            print(f"# jax grid-point memo: {gst['hits']} hits,"
-                  f" {gst['misses']} misses; stage-layout memo:"
-                  f" {lst['hits']} hits, {lst['misses']} misses",
+            print(f"# grid-point memo: {gst['hits']} hits,"
+                  f" {gst['misses']} misses, {gst['evictions']} evictions;"
+                  f" stage-layout memo: {lst['hits']} hits,"
+                  f" {lst['misses']} misses, {lst['evictions']} evictions",
                   file=sys.stderr)
+        if args.engine == "pallas":
+            from repro.core import fabric_pallas as _fp
+            for name, ps in sorted(_fp.memo_stats().items()):
+                print(f"# pallas {name} memo: {ps['hits']} hits,"
+                      f" {ps['misses']} misses, {ps['evictions']}"
+                      f" evictions ({ps['size']}/{ps['cap']} resident)",
+                      file=sys.stderr)
     for name, recs in results.items():
         print(f"# {name}: {len(recs)} records ({mode}, {args.engine})")
 

@@ -190,16 +190,24 @@ class ReferenceFabric:
 
 
 class CappedMemo:
-    """Tiny process-level memo shared by the engines' layout caches: a
-    dict with a size cap (clear-all on overflow — every entry is a pure
-    recomputable function of its key) and hit/miss counters.  A ``None``
-    key disables memoization for that call."""
+    """Tiny process-level LRU memo shared by the engines' layout caches.
+
+    A dict with a size cap and hit/miss/eviction counters: a hit
+    refreshes the entry's recency, and an insert past the cap evicts the
+    least-recently-used entry — never the whole cache, so a sweep that
+    cycles through more layouts than the cap (32k-rank grids interleaved
+    with small differential points) degrades to partial reuse instead of
+    thrashing, and memory stays bounded by ``cap`` entries.  Every entry
+    is a pure recomputable function of its key, so eviction is always
+    safe.  A ``None`` key disables memoization for that call.
+    """
 
     def __init__(self, cap: int):
         self.cap = cap
-        self._d: dict = {}
+        self._d: dict = {}  # insertion-ordered; last = most recent
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def get(self, key):
         if key is None:
@@ -209,21 +217,29 @@ class CappedMemo:
             self.misses += 1
         else:
             self.hits += 1
+            # refresh recency: move to the ordered dict's tail
+            del self._d[key]
+            self._d[key] = value
         return value
 
     def put(self, key, value) -> None:
         if key is None:
             return
-        if len(self._d) >= self.cap:
-            self._d.clear()
+        if key in self._d:
+            del self._d[key]
+        elif len(self._d) >= self.cap:
+            self._d.pop(next(iter(self._d)))  # LRU = ordered-dict head
+            self.evictions += 1
         self._d[key] = value
 
     def clear(self) -> None:
         self._d.clear()
-        self.hits = self.misses = 0
+        self.hits = self.misses = self.evictions = 0
 
     def stats(self) -> dict:
-        return {"hits": self.hits, "misses": self.misses}
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "size": len(self._d),
+                "cap": self.cap}
 
     def __len__(self) -> int:
         return len(self._d)

@@ -1,0 +1,761 @@
+"""The fused Pallas fabric engine: one kernel program per super-batch.
+
+Fourth engine of the fabric family (``engine="pallas"``).  It advances
+the same three-stage resource model — per-rank VCI banks, per-rank NIC,
+per-directed-link wires — as a **single fused Pallas kernel** instead of
+the jax engine's chain of jitted scans plus host-side finish reduction:
+
+  * the whole grid of sweep points is flattened into one cfg-bucketed
+    super-batch; per-stage jagged groups are re-bucketed by segment
+    depth — **exact-depth, mask-free buckets** when a stage has at most
+    :data:`MAX_EXACT_DEPTHS` distinct depths (the common stencil case:
+    every VCI bank of a dimension sees the same message count), padded
+    power-of-two classes with masks otherwise;
+  * per-message stage-1 costs (previous-owner injection chain, protocol
+    copy costs) are precomputed on the host in float64 with exactly the
+    scalar engine's operation order, so the kernel body is nothing but
+    the queue recurrences ``t[i] = max(r[i], t[i-1]) + c[i]``;
+  * per-stage queue state lives in VMEM scratch refs threaded through
+    the bucket scans, and the :class:`~repro.core.fabric.NetConfig`
+    costs enter as a scalar-prefetch operand, so traces are shared
+    across cost points;
+  * the finish reduction (per-flow max arrival + affine finish offsets
+    + per-rank max) runs **inside the kernel** via gathers into flow-
+    and rank-segment layouts — a 32k-rank point returns 32768 floats
+    instead of 1.6M arrivals.
+
+Under the interpreter (``REPRO_PALLAS_INTERPRET=1``, this container's
+default) the kernel runs as one fused grid program: the interpreter
+threads every ref through every grid step, so a multi-program grid pays
+a per-step toll the fused form avoids.  ``REPRO_PALLAS_GRID=bucket``
+selects the one-program-per-bucket grid instead — the layout a compiled
+TPU deployment wants, where per-bucket programs pipeline block loads —
+and is differential-tested but slower under interpretation.
+
+Precision contract: identical to the jax engine — bit-for-bit equal to
+``ReferenceFabric`` under ``JAX_ENABLE_X64`` (host costs are float64
+with the reference operation order; adding ``0.0`` is bitwise identity;
+``max`` reductions are order-independent), tolerance-close under
+float32.  Pinned by ``tests/test_engine_pallas.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from dataclasses import dataclass
+from typing import Dict, Hashable, List, Optional, Tuple
+
+import numpy as np
+
+from . import fabric as _fb
+from .fabric import NetConfig
+from .fabric_jax import (HAVE_JAX, GridItem, JaxFabric, _consts,
+                         _raw_layouts, _require_jax, x64_enabled)
+from ..kernels import runtime as _rt
+
+if HAVE_JAX:
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+
+# A stage whose groups span at most this many distinct depths is
+# bucketed by *exact* depth — no padding, no masks, no wasted lanes.
+MAX_EXACT_DEPTHS = 8
+
+
+def _bucket_grid_mode() -> bool:
+    """One grid program per bucket (the compiled-TPU layout) instead of
+    the fused single program the interpreter prefers."""
+    return os.environ.get("REPRO_PALLAS_GRID", "fused") == "bucket"
+
+
+@dataclass
+class FinishSpec:
+    """In-kernel finish reduction of one grid item.
+
+    Valid only for *affine* finishes (``finish_batch(flows, None, x) ==
+    x + foff`` elementwise — the caller probes this): the kernel then
+    computes per-flow max arrival + ``foff`` and the per-rank max of
+    those, returning per-rank completion times directly.
+    """
+    fid: np.ndarray    # (n,) flow id of each merge-ordered message
+    foff: np.ndarray   # (F,) affine finish offset per flow
+    fdst: np.ndarray   # (F,) destination rank per flow
+    n_ranks: int
+
+
+@dataclass
+class _Bucket:
+    """One depth-class of a stage: ``idx[k, g]`` is the global message
+    id of the k-th member of the bucket's g-th segment; ``mask`` marks
+    real slots (None when the bucket is exact-depth); ``sel`` names the
+    segments as indices into the stage's concatenated group list."""
+    idx: np.ndarray
+    mask: Optional[np.ndarray]
+    sel: np.ndarray
+
+
+def _stage_buckets(order: np.ndarray, counts: np.ndarray,
+                   offsets: np.ndarray, n: int
+                   ) -> Tuple[List[_Bucket], np.ndarray, int]:
+    """Re-bucket one stage's jagged segments by depth class.
+
+    Returns ``(buckets, pos, size)``: ``pos[i]`` is message i's slot in
+    the stage's flat scan-output vector (concatenation of the buckets'
+    raveled ``(K, G)`` matrices, ``size`` total slots).
+    """
+    exact = len(np.unique(counts)) <= MAX_EXACT_DEPTHS
+    if exact:
+        kcls = counts
+    else:  # counts >= 1 always; log2 of an exact power of two is exact
+        kcls = (1 << np.ceil(np.log2(np.maximum(counts, 1)))
+                .astype(np.int64))
+    pos = np.empty(n, dtype=np.int64)
+    buckets: List[_Bucket] = []
+    base = 0
+    for K in np.unique(kcls).tolist():
+        sel = np.nonzero(kcls == K)[0]
+        G = len(sel)
+        cnt = counts[sel]
+        offs = offsets[sel]
+        total = int(cnt.sum())
+        starts = np.zeros(G, dtype=np.int64)
+        np.cumsum(cnt[:-1], out=starts[1:])
+        within = np.arange(total, dtype=np.int64) - np.repeat(starts, cnt)
+        col = np.repeat(np.arange(G, dtype=np.int64), cnt)
+        members = order[np.repeat(offs, cnt) + within]
+        idx = np.zeros((K, G), dtype=np.int32)
+        idx[within, col] = members
+        if int(cnt.min()) == K:
+            mask = None
+        else:
+            mask = np.zeros((K, G), dtype=bool)
+            mask[within, col] = True
+        pos[members] = base + within * G + col
+        buckets.append(_Bucket(idx=idx, mask=mask, sel=sel))
+        base += K * G
+    return buckets, pos, base
+
+
+def _cost_columns(t_ready, nbytes, thread, put, am_copy, cfg: NetConfig,
+                  lay1, warm_prev: Optional[np.ndarray]
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-message stage costs, precomputed host-side in float64.
+
+    Performs exactly the scalar engine's IEEE-754 operations: the
+    stage-1 injection cost needs each message's predecessor on its VCI
+    bank — a pure function of the (memoized) bank grouping — so it
+    vectorizes as a shifted gather instead of a scan.  ``warm_prev``
+    seeds each bank's chain with its stored last owner (None = cold,
+    every bank starts idle).  Returns ``(c1, c3, rdv)``: stage-1 cost
+    (injection + protocol copy), stage-3 wire service time, and the
+    rendezvous round-trip added to stage-3 release times.
+    """
+    n = t_ready.shape[0]
+    nb = np.asarray(nbytes, dtype=np.float64)
+    copy = am_copy | ((nb > cfg.eager_max) & (nb <= cfg.bcopy_max))
+    copy_cost = np.where(copy, nb / cfg.beta_copy, 0.0)
+    order1, _, _, offs1 = lay1
+    th_s = np.asarray(thread)[order1]
+    prev_s = np.empty_like(th_s)
+    prev_s[offs1] = -1 if warm_prev is None else warm_prev
+    inner = np.ones(n, dtype=bool)
+    inner[offs1] = False
+    prev_s[inner] = th_s[np.nonzero(inner)[0] - 1]
+    put_s = np.asarray(put)[order1]
+    base_s = np.where(
+        prev_s < 0,
+        np.where(put_s, cfg.alpha_put_first, cfg.alpha_first),
+        np.where(prev_s != th_s, cfg.chi_switch,
+                 np.where(put_s, cfg.alpha_put, cfg.alpha_msg)))
+    c1 = np.empty(n)
+    c1[order1] = base_s
+    c1 = c1 + copy_cost  # += 0.0 on non-copy rows: bitwise identity
+    rdv = np.where(~np.asarray(am_copy) & (nb > cfg.bcopy_max),
+                   2.0 * cfg.alpha_wire, 0.0)
+    c3 = nb / cfg.beta
+    return c1, c3, rdv
+
+
+def _pack_stage_ops(b1, b2, b3, pos1, pos2):
+    """Static kernel operands + per-bucket metadata for the three stage
+    blocks, in the kernel's pop order (the single source of truth the
+    kernel's operand cursor mirrors): per stage-1 bucket ``idx[,mask]``,
+    per stage-2 bucket ``pos1[idx][,mask]``, per stage-3 bucket ``idx,
+    pos2[idx][,mask]``.  Also returns each stage's bucket-major group
+    permutation (for warm-state init/readback vectors)."""
+    statics: List[np.ndarray] = []
+    metas = []
+    grp_orders = []
+    for s, bks in enumerate((b1, b2, b3)):
+        m = []
+        fo = go = 0
+        for bk in bks:
+            K, G = bk.idx.shape
+            m.append((K, G, bk.mask is not None, fo, go))
+            if s == 0:
+                statics.append(bk.idx)
+            elif s == 1:
+                statics.append(pos1[bk.idx].astype(np.int32))
+            else:
+                statics.append(bk.idx)
+                statics.append(pos2[bk.idx].astype(np.int32))
+            if bk.mask is not None:
+                statics.append(bk.mask)
+            fo += K * G
+            go += G
+        metas.append(tuple(m))
+        grp_orders.append(np.concatenate([bk.sel for bk in bks]))
+    return metas, statics, grp_orders
+
+
+@dataclass(frozen=True)
+class _Meta:
+    """Hashable shape/structure key of one kernel build (the
+    ``lru_cache`` key of :func:`_build_call`): per-bucket ``(K, G,
+    masked, flat_offset, group_offset)`` tuples plus the runtime
+    switches that select a different trace."""
+    mode: str           # "finish" | "arrivals"
+    f64: bool
+    interpret: bool
+    bucket_grid: bool
+    n: int
+    st1: tuple
+    st2: tuple
+    st3: tuple
+    sizes: tuple        # flat scan-vector slots per stage
+    n_groups: tuple     # segment count per stage
+    finf: tuple         # finish flow buckets: (K, G, masked, go)
+    n_flows: int
+    finr: tuple         # finish rank buckets: (K, G, masked, go)
+    n_rank_out: int
+
+
+def _n_inputs(meta: _Meta) -> int:
+    n = 7 + (1 if meta.mode == "finish" else 0)
+    n += sum(1 + mk for (_, _, mk, _, _) in meta.st1)
+    n += sum(1 + mk for (_, _, mk, _, _) in meta.st2)
+    n += sum(2 + mk for (_, _, mk, _, _) in meta.st3)
+    if meta.mode == "finish":
+        n += sum(1 + mk for (_, _, mk, _) in meta.finf) + 1  # + fperm
+        n += sum(1 + mk for (_, _, mk, _) in meta.finr)
+    else:
+        n += 1  # pos3 (per-message arrival gather)
+    return n
+
+
+def _scan_vals(r, c, m, cur0, cscalar=None):
+    """One bucket's queue recurrence ``t[k] = max(r[k], t[k-1]) + c[k]``
+    down the depth axis, vectorized across the bucket's segments.
+    Returns ``(last_carry, ys)`` — the per-segment busy-until state and
+    the full (K, G) release matrix.  Masked (padded) lanes never touch
+    the carry; their ys slots are garbage nothing gathers from."""
+    if r.shape[0] == 1:  # depth-1 segments: no scan machinery at all
+        ck = cscalar if cscalar is not None else c[0]
+        t = jnp.maximum(r[0], cur0) + ck
+        last = t if m is None else jnp.where(m[0], t, cur0)
+        return last, t[None]
+    if cscalar is None:
+        if m is None:
+            def step(cur, xs):
+                rk, ck = xs
+                t = jnp.maximum(rk, cur) + ck
+                return t, t
+            xs = (r, c)
+        else:
+            def step(cur, xs):
+                rk, ck, mk = xs
+                t = jnp.maximum(rk, cur) + ck
+                return jnp.where(mk, t, cur), t
+            xs = (r, c, m)
+    else:
+        if m is None:
+            def step(cur, rk):
+                t = jnp.maximum(rk, cur) + cscalar
+                return t, t
+            xs = r
+        else:
+            def step(cur, xs):
+                rk, mk = xs
+                t = jnp.maximum(rk, cur) + cscalar
+                return jnp.where(mk, t, cur), t
+            xs = (r, m)
+    return lax.scan(step, cur0, xs)
+
+
+@functools.lru_cache(maxsize=64)
+def _build_call(meta: _Meta):
+    """Build (once per structure) the jitted ``pallas_call`` advancing a
+    whole super-batch.  Operand order mirrors :func:`_pack_stage_ops`
+    exactly; the NetConfig cost vector rides the scalar-prefetch slot so
+    different cost points share the trace."""
+    _require_jax()
+    dtype = jnp.float64 if meta.f64 else jnp.float32
+    finish = meta.mode == "finish"
+    n_in = _n_inputs(meta)
+    n_out = 1 if finish else 4
+    s1, s2, s3 = meta.sizes
+    G1, G2, G3 = meta.n_groups
+    n_prog = len(meta.st1) + len(meta.st2) + len(meta.st3)
+    n_prog += (len(meta.finf) + 1 + len(meta.finr)) if finish else 1
+
+    def kernel(consts_ref, *refs):
+        ins = refs[:n_in]
+        outs = refs[n_in:n_in + n_out]
+        scratch = refs[n_in + n_out:]
+        ys1_ref, ys2_ref, ys3_ref = scratch[0], scratch[1], scratch[2]
+        if finish:
+            fmb_ref, fin_ref = scratch[3], scratch[4]
+            rank_out = outs[0]
+        else:
+            arr_out, cur1_out, cur2_out, cur3_out = outs
+        tr_ref, c1_ref, c3_ref, rdv_ref = ins[0:4]
+        init_refs = ins[4:7]
+        cursor = [8 if finish else 7]
+        if finish:
+            foff_ref = ins[7]
+
+        def pop():
+            ref = ins[cursor[0]]
+            cursor[0] += 1
+            return ref
+
+        aw, anic, ar = consts_ref[2], consts_ref[6], consts_ref[9]
+        programs = []
+        for (K, G, masked, fo, go) in meta.st1:
+            idx_ref = pop()
+            m_ref = pop() if masked else None
+
+            def t1(idx_ref=idx_ref, m_ref=m_ref, K=K, G=G, fo=fo, go=go):
+                idx = idx_ref[...]
+                m = None if m_ref is None else m_ref[...]
+                cur0 = init_refs[0][...][go:go + G]
+                last, ys = _scan_vals(tr_ref[...][idx], c1_ref[...][idx],
+                                      m, cur0)
+                ys1_ref[fo:fo + K * G] = ys.reshape(-1)
+                if not finish:
+                    cur1_out[go:go + G] = last
+            programs.append(t1)
+        for (K, G, masked, fo, go) in meta.st2:
+            p_ref = pop()
+            m_ref = pop() if masked else None
+
+            def t2(p_ref=p_ref, m_ref=m_ref, K=K, G=G, fo=fo, go=go):
+                m = None if m_ref is None else m_ref[...]
+                cur0 = init_refs[1][...][go:go + G]
+                last, ys = _scan_vals(ys1_ref[...][p_ref[...]], None, m,
+                                      cur0, cscalar=anic)
+                ys2_ref[fo:fo + K * G] = ys.reshape(-1)
+                if not finish:
+                    cur2_out[go:go + G] = last
+            programs.append(t2)
+        for (K, G, masked, fo, go) in meta.st3:
+            idx_ref = pop()
+            p_ref = pop()
+            m_ref = pop() if masked else None
+
+            def t3(idx_ref=idx_ref, p_ref=p_ref, m_ref=m_ref, K=K, G=G,
+                   fo=fo, go=go):
+                idx = idx_ref[...]
+                # rendezvous RTS/CTS delays the wire-queue entry; the
+                # carried busy-until state excludes the +aw+ar delivery
+                # tail, which only the arrival values pick up
+                r = ys2_ref[...][p_ref[...]] + rdv_ref[...][idx]
+                m = None if m_ref is None else m_ref[...]
+                cur0 = init_refs[2][...][go:go + G]
+                last, ys = _scan_vals(r, c3_ref[...][idx], m, cur0)
+                ys3_ref[fo:fo + K * G] = (ys + aw + ar).reshape(-1)
+                if not finish:
+                    cur3_out[go:go + G] = last
+            programs.append(t3)
+        if finish:
+            for (K, G, masked, go) in meta.finf:
+                p_ref = pop()
+                m_ref = pop() if masked else None
+
+                def tf(p_ref=p_ref, m_ref=m_ref, G=G, go=go):
+                    v = ys3_ref[...][p_ref[...]]
+                    if m_ref is not None:  # arrivals > 0: 0-fill is safe
+                        v = jnp.where(m_ref[...], v, jnp.zeros_like(v))
+                    fmb_ref[go:go + G] = v.max(axis=0)
+                programs.append(tf)
+            fperm_ref = pop()
+
+            def tc(fperm_ref=fperm_ref):
+                fin_ref[...] = fmb_ref[...][fperm_ref[...]] + foff_ref[...]
+            programs.append(tc)
+            for (K, G, masked, go) in meta.finr:
+                f_ref = pop()
+                m_ref = pop() if masked else None
+
+                def tr_(f_ref=f_ref, m_ref=m_ref, G=G, go=go):
+                    v = fin_ref[...][f_ref[...]]
+                    if m_ref is not None:
+                        v = jnp.where(m_ref[...], v, jnp.zeros_like(v))
+                    rank_out[go:go + G] = v.max(axis=0)
+                programs.append(tr_)
+        else:
+            pos3_ref = pop()
+
+            def te(pos3_ref=pos3_ref):
+                arr_out[...] = ys3_ref[...][pos3_ref[...]]
+            programs.append(te)
+        if meta.bucket_grid:
+            pid = pl.program_id(0)
+            for i, prog in enumerate(programs):
+                pl.when(pid == i)(prog)
+        else:
+            for prog in programs:
+                prog()
+
+    if finish:
+        out_shape = jax.ShapeDtypeStruct((meta.n_rank_out,), dtype)
+        out_specs = pl.BlockSpec(memory_space=pltpu.ANY)
+    else:
+        out_shape = (jax.ShapeDtypeStruct((meta.n,), dtype),
+                     jax.ShapeDtypeStruct((G1,), dtype),
+                     jax.ShapeDtypeStruct((G2,), dtype),
+                     jax.ShapeDtypeStruct((G3,), dtype))
+        out_specs = (pl.BlockSpec(memory_space=pltpu.ANY),) * 4
+    scratch_shapes = [pltpu.VMEM((s1,), dtype), pltpu.VMEM((s2,), dtype),
+                      pltpu.VMEM((s3,), dtype)]
+    if finish:
+        scratch_shapes += [pltpu.VMEM((meta.n_flows,), dtype),
+                           pltpu.VMEM((meta.n_flows,), dtype)]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_prog if meta.bucket_grid else 1,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * n_in,
+        out_specs=out_specs,
+        scratch_shapes=scratch_shapes)
+    return jax.jit(pl.pallas_call(kernel, grid_spec=grid_spec,
+                                  out_shape=out_shape,
+                                  interpret=meta.interpret))
+
+
+def _runtime_meta(core: dict, mode: str) -> _Meta:
+    return _Meta(mode=mode, f64=x64_enabled(),
+                 interpret=_rt.interpret_mode(),
+                 bucket_grid=_bucket_grid_mode(), **core)
+
+
+# ---------------------------------------------------------------------------
+# Super-batch assembly (host side)
+# ---------------------------------------------------------------------------
+
+def _assemble(items: List[GridItem],
+              finishes: Optional[List[FinishSpec]]):
+    """Flatten one cfg-uniform bucket of grid items into the kernel's
+    operands.  Per-item stage layouts (memoized, shared with the jax
+    engine) compose by message-base offset — no global argsort; only the
+    finish reduction's flow/rank groupings sort globally.  Returns
+    ``(core, dyn, statics, aux)``: the structure dict :func:`_runtime_meta`
+    completes, float64 dynamic operands, integer/bool static operands,
+    and the host-side unpack info."""
+    N = sum(len(it) for it in items)
+    tr = np.empty(N)
+    c1 = np.empty(N)
+    c3 = np.empty(N)
+    rdv = np.empty(N)
+    st_orders: Tuple[list, ...] = ([], [], [])
+    st_counts: Tuple[list, ...] = ([], [], [])
+    st_offs: Tuple[list, ...] = ([], [], [])
+    fid_l, foff_l, fdst_l, item_ranks = [], [], [], []
+    item_lens = []
+    base = fbase = rbase = 0
+    for k, it in enumerate(items):
+        n = len(it)
+        sl = slice(base, base + n)
+        lays = _raw_layouts(it.src, it.dst, it.vci % it.n_vcis,
+                            it.n_vcis, it.n_ranks, it.key)
+        tr[sl] = it.t_ready
+        c1[sl], c3[sl], rdv[sl] = _cost_columns(
+            it.t_ready, it.nbytes, it.thread, it.put, it.am_copy,
+            it.cfg, lays[0], None)
+        for s in range(3):
+            o, _, cnt, f = lays[s]
+            st_orders[s].append(o + base)
+            st_counts[s].append(cnt)
+            st_offs[s].append(f + base)
+        if finishes is not None:
+            fin = finishes[k]
+            fid_l.append(fin.fid + fbase)
+            foff_l.append(fin.foff)
+            fdst_l.append(fin.fdst + rbase)
+            item_ranks.append((rbase, fin.n_ranks))
+            fbase += len(fin.foff)
+            rbase += fin.n_ranks
+        item_lens.append(n)
+        base += n
+    stages = []
+    n_groups = []
+    for s in range(3):
+        counts = np.concatenate(st_counts[s])
+        stages.append(_stage_buckets(np.concatenate(st_orders[s]), counts,
+                                     np.concatenate(st_offs[s]), N))
+        n_groups.append(len(counts))
+    (b1, pos1, s1), (b2, pos2, s2), (b3, pos3, s3) = stages
+    (st1m, st2m, st3m), statics, grp_orders = _pack_stage_ops(
+        b1, b2, b3, pos1, pos2)
+    dyn = [tr, c1, c3, rdv, np.zeros(n_groups[0]),
+           np.zeros(n_groups[1]), np.zeros(n_groups[2])]
+    aux: dict = {"item_lens": item_lens, "grp_orders": tuple(grp_orders)}
+    core = dict(n=N, st1=st1m, st2=st2m, st3=st3m, sizes=(s1, s2, s3),
+                n_groups=tuple(n_groups), finf=(), n_flows=0, finr=(),
+                n_rank_out=0)
+    if finishes is None:
+        statics.append(pos3.astype(np.int32))
+        return core, dyn, statics, aux
+    fid = np.concatenate(fid_l)
+    foff = np.concatenate(foff_l)
+    fdst = np.concatenate(fdst_l)
+    F = len(foff)
+    of, uf, cf, ff = _fb._group_layout(fid)
+    if len(uf) != F:
+        raise ValueError("every flow needs at least one wire message")
+    fbuckets, _, _ = _stage_buckets(of, cf, ff, N)
+    finfm = []
+    fperm = np.empty(F, dtype=np.int32)
+    go = 0
+    for bk in fbuckets:
+        K, G = bk.idx.shape
+        finfm.append((K, G, bk.mask is not None, go))
+        statics.append(pos3[bk.idx].astype(np.int32))
+        if bk.mask is not None:
+            statics.append(bk.mask)
+        fperm[uf[bk.sel]] = go + np.arange(G, dtype=np.int32)
+        go += G
+    statics.append(fperm)
+    orr, ur, cr, fr = _fb._group_layout(fdst)
+    rbuckets, _, _ = _stage_buckets(orr, cr, fr, F)
+    finrm = []
+    rank_out_ids = []
+    go = 0
+    for bk in rbuckets:
+        K, G = bk.idx.shape
+        finrm.append((K, G, bk.mask is not None, go))
+        statics.append(bk.idx)  # values are flow ids: gathers from fin
+        if bk.mask is not None:
+            statics.append(bk.mask)
+        rank_out_ids.append(ur[bk.sel])
+        go += G
+    dyn.append(foff)
+    aux.update(rank_out_ids=np.concatenate(rank_out_ids),
+               item_ranks=item_ranks, n_ranks_total=rbase)
+    core.update(finf=tuple(finfm), n_flows=F, finr=tuple(finrm),
+                n_rank_out=go)
+    return core, dyn, statics, aux
+
+
+# Whole-super-batch operands (device-committed), keyed by the member
+# items' layout keys + precision: benchmark repeats re-dispatch the
+# kernel without re-assembling or re-copying anything.
+_OPS_MEMO = _fb.CappedMemo(8)
+# Single-batch arrivals-mode structure (stage buckets + static operands)
+# for the warm-state driver path, keyed by layout key + precision.
+_ARR_MEMO = _fb.CappedMemo(32)
+
+
+def memo_stats() -> dict:
+    return {"grid_ops": _OPS_MEMO.stats(), "arrivals": _ARR_MEMO.stats()}
+
+
+def clear_memos() -> None:
+    """Reset the pallas engine's operand caches and built kernels with
+    their counters (``sweep --profile`` cold pass)."""
+    _OPS_MEMO.clear()
+    _ARR_MEMO.clear()
+    _build_call.cache_clear()
+
+
+def _dispatch(items: List[GridItem],
+              finishes: Optional[List[FinishSpec]]):
+    """Assemble (or reuse) one bucket's operands and dispatch the fused
+    kernel; returns the *unsynced* jax result plus the unpack aux."""
+    mode = "finish" if finishes is not None else "arrivals"
+    key = None
+    if all(it.key is not None for it in items):
+        key = ("pallas-" + mode, x64_enabled(),
+               tuple(it.key for it in items))
+    entry = _OPS_MEMO.get(key) if key is not None else None
+    if entry is None:
+        core, dyn, statics, aux = _assemble(items, finishes)
+        dtype = jnp.float64 if x64_enabled() else jnp.float32
+        consts = jnp.asarray(np.array(_consts(items[0].cfg)), dtype)
+        ops = ([consts] + [jnp.asarray(a, dtype) for a in dyn]
+               + [jnp.asarray(a) for a in statics])
+        entry = (core, ops, aux)
+        if key is not None:
+            _OPS_MEMO.put(key, entry)
+    core, ops, aux = entry
+    meta = _runtime_meta(core, mode)
+    return _build_call(meta)(ops[0], *ops[1:]), aux
+
+
+def _cfg_buckets(items: List[GridItem]) -> Dict[tuple, List[int]]:
+    """Items bucketed by (cfg, n_ranks, n_vcis): each bucket's NetConfig
+    is uniform (one scalar-prefetch vector), and keeping rank-grid
+    shapes uniform keeps each bucket's per-resource chain depths nearly
+    uniform too — the exact-depth (mask-free) scan buckets stay under
+    :data:`MAX_EXACT_DEPTHS`, which measures faster than fusing the
+    whole sweep into one mixed-depth masked dispatch."""
+    buckets: Dict[tuple, List[int]] = {}
+    for i, it in enumerate(items):
+        buckets.setdefault((it.cfg, it.n_ranks, it.n_vcis), []).append(i)
+    return buckets
+
+
+def transmit_grid(items: List[GridItem]) -> List[np.ndarray]:
+    """Evaluate many independent cold-start exchanges through the fused
+    kernel; returns each item's per-message arrival times in its input
+    (merge) order.  Drop-in for :func:`repro.core.fabric_jax
+    .transmit_grid` — used for points without an affine finish."""
+    _require_jax()
+    if not items:
+        return []
+    out: List[Optional[np.ndarray]] = [None] * len(items)
+    pending = []
+    for members in _cfg_buckets(items).values():
+        res, aux = _dispatch([items[i] for i in members], None)
+        pending.append((members, res, aux))
+    for members, res, aux in pending:
+        arr = np.asarray(res[0], dtype=np.float64)
+        o = 0
+        for ln, i in zip(aux["item_lens"], members):
+            out[i] = arr[o:o + ln]
+            o += ln
+    return out  # type: ignore[return-value]
+
+
+def transmit_grid_finish(items: List[GridItem],
+                         finishes: List[FinishSpec]) -> List[np.ndarray]:
+    """Evaluate many cold-start exchanges *and their finish reductions*
+    in-kernel; returns each item's per-rank completion times (ranks
+    receiving no flow complete at 0.0, as in the host-side reduction).
+    The 32k-rank path: device->host traffic shrinks from one float per
+    wire message to one per rank."""
+    _require_jax()
+    if not items:
+        return []
+    out: List[Optional[np.ndarray]] = [None] * len(items)
+    pending = []
+    for members in _cfg_buckets(items).values():
+        res, aux = _dispatch([items[i] for i in members],
+                             [finishes[i] for i in members])
+        pending.append((members, res, aux))
+    for members, res, aux in pending:
+        full = np.zeros(aux["n_ranks_total"])
+        full[aux["rank_out_ids"]] = np.asarray(res, dtype=np.float64)
+        for (rb, R), i in zip(aux["item_ranks"], members):
+            out[i] = full[rb:rb + R]
+    return out  # type: ignore[return-value]
+
+
+# ---------------------------------------------------------------------------
+# The warm-state driver fabric
+# ---------------------------------------------------------------------------
+
+def _arr_structure(lays, n: int):
+    """Stage buckets + committed static operands of one arrivals-mode
+    batch (the warm driver path's per-layout structure cache entry)."""
+    stages = []
+    n_groups = []
+    for s in range(3):
+        order, _, counts, offsets = lays[s]
+        stages.append(_stage_buckets(order, counts, offsets, n))
+        n_groups.append(len(counts))
+    (b1, pos1, s1), (b2, pos2, s2), (b3, pos3, s3) = stages
+    (st1m, st2m, st3m), statics, grp_orders = _pack_stage_ops(
+        b1, b2, b3, pos1, pos2)
+    statics.append(pos3.astype(np.int32))
+    core = dict(n=n, st1=st1m, st2=st2m, st3=st3m, sizes=(s1, s2, s3),
+                n_groups=tuple(n_groups), finf=(), n_flows=0, finr=(),
+                n_rank_out=0)
+    return core, [jnp.asarray(a) for a in statics], tuple(grp_orders)
+
+
+class PallasFabric(JaxFabric):
+    """Fused-kernel fabric: one Pallas program per staged batch.
+
+    Scalar state stays authoritative on the Python side exactly as in
+    the jax engine — warm semantics (steady-state iterations, dependent
+    RMA traffic between batches) are identical.  A staged batch folds
+    the warm VCI owners into the host cost precompute, passes the
+    per-resource busy-until clocks as the kernel's init vectors, and
+    writes the carried-out clocks back.  Tiny or narrow batches take
+    the same bit-identical scalar fallback as the other engines.
+    """
+
+    def transmit_arrays(self, t_ready, nbytes, vci, thread, put, am_copy,
+                        src, dst, *, layout_key=None):
+        n = t_ready.shape[0]
+        if n == 0:
+            return np.empty(0)
+        per_src = np.bincount(src, minlength=self.n_ranks)
+        if n <= _fb.SCALAR_BATCH_CUTOFF \
+                or n < _fb.MIN_GROUP_PARALLELISM * int(per_src.max()):
+            return self._transmit_scalar(t_ready, nbytes, vci, thread,
+                                         put, am_copy, src, dst)
+        vci = vci % self.n_vcis
+        lays = _raw_layouts(src, dst, vci, self.n_vcis, self.n_ranks,
+                            layout_key)
+        skey = None
+        if layout_key is not None:
+            skey = ("pallas-arr", x64_enabled(), layout_key)
+        entry = _ARR_MEMO.get(skey) if skey is not None else None
+        if entry is None:
+            entry = _arr_structure(lays, n)
+            if skey is not None:
+                _ARR_MEMO.put(skey, entry)
+        core, statics, grp_orders = entry
+
+        order1, uniq1, counts1, offs1 = lays[0]
+        banks = [(g // self.n_vcis, g % self.n_vcis)
+                 for g in uniq1.tolist()]
+        warm_prev = np.array([-1 if self.vci_last_thread[r][v] is None
+                              else self.vci_last_thread[r][v]
+                              for r, v in banks], dtype=np.int64)
+        c1, c3, rdv = _cost_columns(t_ready, nbytes, thread, put, am_copy,
+                                    self.cfg, lays[0], warm_prev)
+        state1 = np.array([self.vci_free[r][v] for r, v in banks])
+        ranks = lays[1][1].tolist()
+        state2 = np.array([self.nic_free[r] for r in ranks])
+        links = [(c // self.n_ranks, c % self.n_ranks)
+                 for c in lays[2][1].tolist()]
+        state3 = np.array([self.wire_free.get(sd, 0.0) for sd in links])
+
+        dtype = jnp.float64 if x64_enabled() else jnp.float32
+        dyn = [jnp.asarray(a, dtype) for a in
+               (t_ready, c1, c3, rdv, state1[grp_orders[0]],
+                state2[grp_orders[1]], state3[grp_orders[2]])]
+        consts = jnp.asarray(np.array(_consts(self.cfg)), dtype)
+        meta = _runtime_meta(core, "arrivals")
+        arr, cur1, cur2, cur3 = _build_call(meta)(consts, *dyn, *statics)
+        arrivals = np.asarray(arr, dtype=np.float64)
+
+        # warm state out: the kernel's cur vectors are in bucket-group
+        # order; unsort them back to each stage's group (resource) order
+        s1o = np.empty(len(banks))
+        s1o[grp_orders[0]] = np.asarray(cur1, dtype=np.float64)
+        # a bank's final owner is its last queued message's thread — a
+        # pure function of the (host-known) grouping, not of the times
+        last_thread = np.asarray(thread)[order1[offs1 + counts1 - 1]]
+        for (r, v), busy, owner in zip(banks, s1o.tolist(),
+                                       last_thread.tolist()):
+            self.vci_free[r][v] = busy
+            self.vci_last_thread[r][v] = int(owner)
+        s2o = np.empty(len(ranks))
+        s2o[grp_orders[1]] = np.asarray(cur2, dtype=np.float64)
+        for r, busy in zip(ranks, s2o.tolist()):
+            self.nic_free[r] = busy
+        s3o = np.empty(len(links))
+        s3o[grp_orders[2]] = np.asarray(cur3, dtype=np.float64)
+        self.wire_free.update(zip(links, s3o.tolist()))
+        self.n_messages += n
+        for r, cnt in enumerate(per_src.tolist()):
+            if cnt:
+                self.sent_per_rank[r] += cnt
+        return arrivals

@@ -76,7 +76,7 @@ from .partition import PartitionedRequest
 from .topology import CartTopology, HaloSpec
 
 # The fabric engines selectable via the drivers' ``engine`` argument.
-ENGINES = ("vector", "reference", "jax")
+ENGINES = ("vector", "reference", "jax", "pallas")
 
 # Backward-compatible alias: the scalar fabric used to live here.
 _Fabric = ReferenceFabric
@@ -91,6 +91,9 @@ def _make_fabric(engine: str, cfg: NetConfig, n_vcis: int,
     if engine == "jax":
         from . import fabric_jax  # lazy: keeps the NumPy path jax-free
         return fabric_jax.JaxFabric(cfg, n_vcis, n_ranks=n_ranks)
+    if engine == "pallas":
+        from . import fabric_pallas  # lazy, as above
+        return fabric_pallas.PallasFabric(cfg, n_vcis, n_ranks=n_ranks)
     raise ValueError(f"unknown engine {engine!r}; one of {ENGINES}")
 
 
@@ -664,9 +667,10 @@ def merge_memo_stats() -> dict:
 
 
 def clear_merge_memo() -> None:
-    """Reset the merge-order, assembled-grid-point and (when the jax
-    engine is loaded) stage-layout/bucket memos with their counters —
-    `sweep --profile` calls this so its cold pass is cold."""
+    """Reset the merge-order, assembled-grid-point and (when the jax or
+    pallas engine is loaded) stage-layout/bucket/operand memos with
+    their counters — `sweep --profile` calls this so its cold pass is
+    cold."""
     import sys
     _MERGE_MEMO.clear()
     _MERGE_MESSAGES_SAVED[0] = 0
@@ -674,6 +678,9 @@ def clear_merge_memo() -> None:
     fj = sys.modules.get("repro.core.fabric_jax")
     if fj is not None:
         fj.clear_layout_memo()
+    fpl = sys.modules.get("repro.core.fabric_pallas")
+    if fpl is not None:
+        fpl.clear_memos()
 
 
 def _merge_order(t_ready: np.ndarray,
@@ -1163,22 +1170,71 @@ def _finish_prepared(prep: _PreparedStencil,
         n_messages=int(prep.lens.sum()))
 
 
-def simulate_stencil_grid(points: Sequence[Mapping]
+def _pallas_finish_spec(prep: _PreparedStencil, order: np.ndarray):
+    """The point's in-kernel finish reduction, or None when its finish
+    is not affine (the pallas path then falls back to arrivals mode +
+    the host-side :func:`_finish_prepared`).
+
+    Affinity is established by probing ``finish_batch`` at 0 and 1:
+    ``finish(x) == x + finish(0)`` elementwise (bitwise under IEEE-754 —
+    one commutative add) certifies the kernel's ``flow_max + offset``
+    reproduces the host reduction exactly.
+    """
+    from . import fabric_pallas
+    F = len(prep.lens)
+    if F == 0 or np.any(prep.lens <= 0):
+        return None
+    foff = prep.sched.finish_batch(prep.flows, None, np.zeros(F))
+    if foff is None:
+        return None
+    probe = prep.sched.finish_batch(prep.flows, None, np.ones(F))
+    if probe is None or not np.array_equal(probe, 1.0 + foff):
+        return None
+    fid = np.repeat(np.arange(F, dtype=np.int64), prep.lens)[order]
+    return fabric_pallas.FinishSpec(
+        fid=fid, foff=np.asarray(foff, dtype=np.float64),
+        fdst=prep.dsts.astype(np.int64), n_ranks=prep.n_ranks)
+
+
+def _result_from_rank_tts(prep: _PreparedStencil, aux: dict,
+                          rank_tts: np.ndarray) -> StencilResult:
+    """Build one grid point's result from in-kernel per-rank times."""
+    if "sent" not in aux:
+        aux["sent"] = np.bincount(prep.cols["src"],
+                                  minlength=prep.n_ranks).tolist()
+    tts = float(rank_tts.max())
+    return StencilResult(
+        approach=prep.approach, dims=prep.dims, periodic=prep.periodic,
+        face_bytes=prep.face_bytes, rank_tts_s=rank_tts.tolist(),
+        sent_per_rank=list(aux["sent"]), time_s=tts - prep.compute,
+        tts_s=tts, n_messages=int(prep.lens.sum()))
+
+
+def simulate_stencil_grid(points: Sequence[Mapping], engine: str = "jax"
                           ) -> List[Optional[StencilResult]]:
-    """Evaluate many stencil sweep points as one vmapped jitted grid.
+    """Evaluate many stencil sweep points as one compiled grid.
 
     Each entry of ``points`` is a kwargs mapping for
     :func:`simulate_stencil` (``approach`` included, ``engine`` absent —
-    this path *is* the jax engine).  Points are assembled into stamped
-    intent-batch tensors, merged with memoized sorts, and advanced by
-    :func:`repro.core.fabric_jax.transmit_grid` — the whole
-    (approach x theta x n_vcis x size) grid in a few XLA dispatches.
-    Returns one :class:`StencilResult` per point, with None for points
-    the batched path cannot evaluate (the caller falls back to
-    :func:`simulate_stencil`).  Bit-for-bit identical to the per-point
-    engines under ``JAX_ENABLE_X64``; tolerance-close under float32.
+    it is this function's argument).  Points are assembled into stamped
+    intent-batch tensors and merged with memoized sorts; the advance is
+    then ``engine="jax"`` — :func:`repro.core.fabric_jax.transmit_grid`,
+    the whole (approach x theta x n_vcis x size) grid in a few vmapped
+    XLA dispatches — or ``engine="pallas"`` — the fused single-kernel
+    super-batch of :mod:`repro.core.fabric_pallas`, which also runs each
+    point's (affine) finish reduction in-kernel and returns per-rank
+    times directly.  Returns one :class:`StencilResult` per point, with
+    None for points the batched path cannot evaluate (the caller falls
+    back to :func:`simulate_stencil`).  Both engines are bit-for-bit
+    identical to the per-point engines under ``JAX_ENABLE_X64``;
+    tolerance-close under float32.
     """
-    from . import fabric_jax  # lazy: only the jax engine needs jax
+    if engine not in ("jax", "pallas"):
+        raise ValueError(
+            f"unknown grid engine {engine!r}; one of ('jax', 'pallas')")
+    from . import fabric_jax  # lazy: only the compiled engines need jax
+    if engine == "pallas":
+        from . import fabric_pallas
     prepared: List[Optional[tuple]] = []
     for p in points:
         try:  # hashable param sets reuse the assembled + sorted point
@@ -1201,16 +1257,39 @@ def simulate_stencil_grid(points: Sequence[Mapping]
                 src=c["src"][order], dst=c["dst"][order],
                 cfg=prep.cfg, n_vcis=prep.n_vcis, n_ranks=prep.n_ranks,
                 key=prep.memo_key)
-            entry = (prep, order, item)
+            # the trailing dict accumulates engine-lazy per-point state
+            # (pallas finish spec, sent-per-rank counts)
+            entry = (prep, order, item, {})
             _GRID_MEMO.put(pkey, entry)
         prepared.append(entry)
-    items = [e[2] for e in prepared if e is not None]
     results: List[Optional[StencilResult]] = [None] * len(prepared)
-    arrs = iter(fabric_jax.transmit_grid(items))
-    for i, entry in enumerate(prepared):
-        if entry is None:
-            continue
-        prep, order, _ = entry
+    live = [(i, e) for i, e in enumerate(prepared) if e is not None]
+    if engine == "pallas":
+        # split points by finish affinity: affine points reduce to
+        # per-rank times in-kernel, the rest return arrivals
+        fin_members, arr_members = [], []
+        for i, (prep, order, item, aux) in live:
+            if "finish" not in aux:
+                aux["finish"] = _pallas_finish_spec(prep, order)
+            (fin_members if aux["finish"] is not None
+             else arr_members).append((i, prep, order, item, aux))
+        if fin_members:
+            rank_tts = fabric_pallas.transmit_grid_finish(
+                [m[3] for m in fin_members],
+                [m[4]["finish"] for m in fin_members])
+            for (i, prep, _, _, aux), tts in zip(fin_members, rank_tts):
+                results[i] = _result_from_rank_tts(prep, aux, tts)
+        if arr_members:
+            arrs = fabric_pallas.transmit_grid(
+                [m[3] for m in arr_members])
+            for (i, prep, order, _, _), sorted_arr in zip(arr_members,
+                                                          arrs):
+                arrivals = np.empty_like(sorted_arr)
+                arrivals[order] = sorted_arr
+                results[i] = _finish_prepared(prep, arrivals)
+        return results
+    arrs = iter(fabric_jax.transmit_grid([e[2] for _, e in live]))
+    for i, (prep, order, _, _) in live:
         sorted_arr = next(arrs)
         arrivals = np.empty_like(sorted_arr)
         arrivals[order] = sorted_arr

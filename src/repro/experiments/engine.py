@@ -25,8 +25,9 @@ so changing a spec's constants invalidates its baseline records loudly
 
 Every entry point takes an ``engine`` argument (``"vector"`` — the
 batched NumPy fabric, the default — ``"reference"`` — the scalar
-oracle — or ``"jax"`` — the XLA-compiled fabric, whose stencil grids
-additionally take the whole-grid vmapped path of
+oracle — ``"jax"`` — the XLA-compiled fabric — or ``"pallas"`` — the
+fused-kernel fabric; the compiled engines' stencil grids additionally
+take the whole-grid path of
 :func:`run_records_batched`); the engine is deliberately *not* part of
 the record key, because every engine must reproduce the same baseline
 records, but it does key the run caches so different engines' results
@@ -302,20 +303,21 @@ def run_records_batched(runner: str, points: Sequence[Mapping[str, Any]],
                         ) -> Optional[List[Optional[Dict[str, float]]]]:
     """Whole-grid evaluation: every sweep point in one vmapped jit call.
 
-    On the jax engine, stencil-runner grids stack all their points into
-    stamped intent-batch tensors and run through
+    On the jax and pallas engines, stencil-runner grids stack all their
+    points into stamped intent-batch tensors and run through
     :func:`repro.core.simulator.simulate_stencil_grid` — a few XLA
-    dispatches for the entire (approach x theta x n_vcis x size) grid
-    instead of one Python-driven fabric per record.  Returns one metrics
-    dict per point, with None for points the batched path cannot
-    evaluate (dependent-traffic schedules, per-rank ready tables) — the
-    caller runs those per point — or None wholesale when the
-    (runner, engine) pair has no batched path at all.
+    dispatches (jax: vmapped pipeline; pallas: one fused kernel with
+    in-kernel finish reductions) for the entire (approach x theta x
+    n_vcis x size) grid instead of one Python-driven fabric per record.
+    Returns one metrics dict per point, with None for points the batched
+    path cannot evaluate (dependent-traffic schedules, per-rank ready
+    tables) — the caller runs those per point — or None wholesale when
+    the (runner, engine) pair has no batched path at all.
     """
-    if engine != "jax" or runner != "stencil":
+    if engine not in ("jax", "pallas") or runner != "stencil":
         return None
     results = sim.simulate_stencil_grid(
-        [_stencil_sim_kwargs(p) for p in points])
+        [_stencil_sim_kwargs(p) for p in points], engine=engine)
     return [None if r is None else
             {"time_us": r.time_us, "n_messages": float(r.n_messages),
              "face_bytes_min": min(r.face_bytes),

@@ -137,6 +137,20 @@ WEAK_SCALING_XL = SweepSpec(
          " vmapped whole-grid path",
 )
 
+WEAK_SCALING_XXL = SweepSpec(
+    name="weak_scaling_xxl",
+    runner="stencil",
+    grid={"approach": _CONTENTION_APPROACHES,
+          "dims": ((16, 16, 16), (32, 16, 16), (32, 32, 16), (32, 32, 32))},
+    fixed={"local_shape": (64, 64, 64), "bytes_per_cell": 8.0, "theta": 4,
+           "n_threads": 2, "n_vcis": 2},
+    smoke={"approach": ("pt2pt_single", "part"), "dims": ((32, 32, 32),)},
+    baseline_approach="pt2pt_single",
+    note="XXL weak scaling to a 32768-rank periodic torus (~1.6M wire"
+         " messages per partitioned record); sized for the fused pallas"
+         " engine's in-kernel finish reductions",
+)
+
 IMBALANCE = SweepSpec(
     name="imbalance",
     runner="imbalance",
@@ -170,7 +184,7 @@ AUTOTUNE = SweepSpec(
 SPECS: Dict[str, SweepSpec] = {
     s.name: s for s in (FIG4, FIG5, FIG6, FIG7, FIG8, STEADY, HALO1D,
                         STENCIL3D, WEAK_SCALING, WEAK_SCALING_XL,
-                        IMBALANCE, AUTOTUNE)
+                        WEAK_SCALING_XXL, IMBALANCE, AUTOTUNE)
 }
 
 

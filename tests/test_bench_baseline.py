@@ -225,7 +225,9 @@ class TestEngineThroughputBench:
     BENCH_PATH = BASELINE_PATH.parent / "BENCH_engine.json"
 
     def test_committed_document_shape(self):
-        from benchmarks.sweep import BENCH_ENGINES, BENCH_EXCLUDED_RUNNERS
+        from benchmarks.sweep import (BENCH_ENGINES,
+                                      BENCH_EXCLUDED_RUNNERS,
+                                      BENCH_SPEC_ENGINES)
         doc = json.loads(self.BENCH_PATH.read_text())
         cells = {(e["spec"], e["engine"]) for e in doc["entries"]}
         for name, spec in SPECS.items():
@@ -234,7 +236,13 @@ class TestEngineThroughputBench:
                     f"{name} is bench-excluded; regenerate"
                     " BENCH_engine.json")
                 continue
+            allowed = BENCH_SPEC_ENGINES.get(name, BENCH_ENGINES)
             for engine in BENCH_ENGINES:
+                if engine not in allowed:
+                    assert (name, engine) not in cells, (
+                        f"{name}/{engine} is engine-restricted;"
+                        " regenerate BENCH_engine.json")
+                    continue
                 assert (name, engine) in cells, (name, engine)
         assert doc.get("jax_enable_x64") is True, (
             "committed BENCH_engine.json must be measured under"
@@ -258,6 +266,19 @@ class TestEngineThroughputBench:
             assert vec_wall / jax_wall >= 3.0, (
                 f"{spec}: jax grid path only {vec_wall / jax_wall:.2f}x"
                 " the vector engine; regenerate BENCH_engine.json")
+
+    def test_committed_pallas_kernel_beats_jax_on_xl_tiers(self):
+        """Acceptance: the fused pallas kernel wins >=3x over the jax
+        grid path's full-grid wall on the XL/XXL weak-scaling tiers."""
+        doc = json.loads(self.BENCH_PATH.read_text())
+        cells = {(e["spec"], e["engine"]): e for e in doc["entries"]
+                 if e["mode"] == "full"}
+        for spec in ("weak_scaling_xl", "weak_scaling_xxl"):
+            jax_wall = cells[(spec, "jax")]["wall_s"]
+            pal_wall = cells[(spec, "pallas")]["wall_s"]
+            assert jax_wall / pal_wall >= 3.0, (
+                f"{spec}: pallas kernel only {jax_wall / pal_wall:.2f}x"
+                " the jax engine; regenerate BENCH_engine.json")
 
     @staticmethod
     def _doc(vector_eps, reference_eps, events=50000):

@@ -1,0 +1,358 @@
+"""Differential suite for the fused-kernel fabric engine
+(``engine="pallas"``).
+
+Mirrors ``tests/test_engine_jax.py`` for the fourth engine: the three
+grouped queue scans (VCI banks, NIC serialization, wire links) run as
+one fused Pallas program, so every driver and approach is diffed
+against the vectorized engine — and therefore the scalar
+``ReferenceFabric`` — under both precision modes:
+
+* ``JAX_ENABLE_X64``: bit-for-bit, no tolerance.  The kernel consumes
+  host-precomputed float64 cost columns built with the exact operation
+  order of the scalar engine, so the in-kernel recurrence
+  ``t = max(r, t_prev) + c`` is the only arithmetic left to match.
+* float32: tolerance-gated (~1e-4 relative); structural counters stay
+  exact.
+
+On CPU CI the kernel runs in interpret mode (the shared
+``REPRO_PALLAS_INTERPRET`` resolver in :mod:`repro.kernels.runtime`),
+which executes the same program through XLA — the differential
+guarantees carry to compiled TPU runs because the operand protocol and
+program are identical.  The ``REPRO_PALLAS_GRID=bucket`` layout (one
+program instance per scan bucket) is diffed against the default fused
+layout.  The 32768-rank ``weak_scaling_xxl`` smoke tier must finish
+within budget and reproduce the committed baseline; the full XXL grid
+is ``slow``-marked.
+"""
+
+import json
+import pathlib
+import time
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro import compat  # noqa: E402
+from repro.core import fabric as fb  # noqa: E402
+from repro.core import fabric_jax as fj  # noqa: E402
+from repro.core import fabric_pallas as fp  # noqa: E402
+from repro.core import perfmodel as pm  # noqa: E402
+from repro.core import simulator as sim  # noqa: E402
+from repro.kernels import runtime as rt  # noqa: E402
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # env without hypothesis: deterministic fallback
+    from _hypo import given, settings, st
+
+APPROACHES = sorted(sim.APPROACHES)
+PIPELINED = ("part", "part_old", "pt2pt_single", "pt2pt_many")
+
+F32_RTOL = 1e-4
+
+
+def _ready(n_threads, theta, seed):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0.0, 25e-6, size=(n_threads, theta))
+
+
+@pytest.fixture
+def forced_scans(monkeypatch):
+    """Route every batch through the fused kernel, however narrow."""
+    monkeypatch.setattr(fb, "SCALAR_BATCH_CUTOFF", 0)
+    monkeypatch.setattr(fb, "MIN_GROUP_PARALLELISM", 0)
+
+
+def _assert_exact(rp, rv):
+    assert rp.n_messages == rv.n_messages
+    assert rp.time_s == rv.time_s  # bit-for-bit, no tolerance
+    assert rp.tts_s == rv.tts_s
+
+
+def _assert_close(rp, rv):
+    assert rp.n_messages == rv.n_messages
+    assert rp.tts_s == pytest.approx(rv.tts_s, rel=F32_RTOL)
+    assert abs(rp.time_s - rv.time_s) <= F32_RTOL * abs(rv.tts_s)
+
+
+def _grid_items(points):
+    """Assemble GridItems + FinishSpecs for the low-level grid entry
+    points, the way ``simulate_stencil_grid`` does internally."""
+    items, fins = [], []
+    for p in points:
+        prep = sim._prepare_stencil(**p)
+        order = sim._merge_order(prep.cols["t_ready"], prep.memo_key)
+        c = prep.cols
+        items.append(fj.GridItem(
+            t_ready=c["t_ready"][order], nbytes=c["nbytes"][order],
+            vci=c["vci"][order], thread=c["thread"][order],
+            put=c["put"][order], am_copy=c["am_copy"][order],
+            src=c["src"][order], dst=c["dst"][order],
+            cfg=prep.cfg, n_vcis=prep.n_vcis, n_ranks=prep.n_ranks,
+            key=prep.memo_key))
+        fins.append(sim._pallas_finish_spec(prep, order))
+    return items, fins
+
+
+class TestX64BitForBit:
+    """Under x64 the fused kernel equals the NumPy engines exactly."""
+
+    @pytest.mark.parametrize("ap", APPROACHES)
+    def test_stencil_all_approaches(self, ap, forced_scans):
+        with compat.x64_mode(True):
+            for dims, n, theta, vcis, seed in (
+                    ((2, 2), 1, 2, 1, 0), ((2, 2, 2), 2, 4, 2, 1)):
+                kw = dict(dims=dims, theta=theta, n_threads=n, n_vcis=vcis,
+                          local_shape=(24, 8, 4)[:len(dims)],
+                          ready=_ready(n, theta, seed))
+                rp = sim.simulate_stencil(ap, engine="pallas", **kw)
+                rv = sim.simulate_stencil(ap, engine="vector", **kw)
+                assert rp.rank_tts_s == rv.rank_tts_s
+                assert rp.sent_per_rank == rv.sent_per_rank
+                _assert_exact(rp, rv)
+
+    @pytest.mark.parametrize("ap", APPROACHES)
+    def test_halo_all_approaches(self, ap, forced_scans):
+        with compat.x64_mode(True):
+            kw = dict(n_ranks=4, theta=4, part_bytes=4096, n_threads=2,
+                      n_vcis=2, ready=_ready(2, 4, 3))
+            rp = sim.simulate_halo(ap, engine="pallas", **kw)
+            rv = sim.simulate_halo(ap, engine="vector", **kw)
+            assert rp.rank_tts_s == rv.rank_tts_s
+            _assert_exact(rp, rv)
+
+    @pytest.mark.parametrize("ap", APPROACHES)
+    def test_oneshot_and_steady(self, ap, forced_scans):
+        """Warm-state drivers: the steady-state loop re-enters the
+        kernel with carried VCI/NIC/wire busy-until vectors."""
+        with compat.x64_mode(True):
+            kw = dict(n_threads=2, theta=4, part_bytes=2048, n_vcis=2,
+                      ready=_ready(2, 4, 5))
+            _assert_exact(sim.simulate(ap, engine="pallas", **kw),
+                          sim.simulate(ap, engine="vector", **kw))
+            rp = sim.simulate_steady_state(ap, n_iters=3, **kw,
+                                           engine="pallas")
+            rv = sim.simulate_steady_state(ap, n_iters=3, **kw,
+                                           engine="vector")
+            assert rp.iter_times_s == rv.iter_times_s
+            assert rp.tts_s == rv.tts_s and rp.n_messages == rv.n_messages
+
+    @pytest.mark.parametrize("ap", PIPELINED[:2])
+    def test_imbalance(self, ap, forced_scans):
+        with compat.x64_mode(True):
+            kw = dict(n_ranks=4, workload=pm.WORKLOADS["stencil"], theta=2,
+                      part_bytes=1 << 18, n_threads=2, n_vcis=2, seed=7)
+            rp = sim.simulate_imbalance(ap, engine="pallas", **kw)
+            rv = sim.simulate_imbalance(ap, engine="vector", **kw)
+            assert rp.rank_tts_s == rv.rank_tts_s
+            assert rp.mean_delay_s == rv.mean_delay_s
+            _assert_exact(rp, rv)
+
+    @given(ap=st.sampled_from(PIPELINED),
+           dims=st.sampled_from([(3, 2), (2, 2, 2)]),
+           theta=st.sampled_from([2, 4]), seed=st.integers(0, 2))
+    @settings(max_examples=10, deadline=None)
+    def test_stencil_randomized(self, ap, dims, theta, seed):
+        """Randomized scenarios through the fused kernel (forced on)."""
+        kw = dict(dims=dims, theta=theta, n_threads=2, n_vcis=2,
+                  local_shape=(24, 8, 4)[:len(dims)],
+                  ready=_ready(2, theta, seed))
+        cutoff, par = fb.SCALAR_BATCH_CUTOFF, fb.MIN_GROUP_PARALLELISM
+        fb.SCALAR_BATCH_CUTOFF = fb.MIN_GROUP_PARALLELISM = 0
+        try:
+            with compat.x64_mode(True):
+                rp = sim.simulate_stencil(ap, engine="pallas", **kw)
+        finally:
+            fb.SCALAR_BATCH_CUTOFF, fb.MIN_GROUP_PARALLELISM = cutoff, par
+        rv = sim.simulate_stencil(ap, engine="vector", **kw)
+        assert rp.rank_tts_s == rv.rank_tts_s
+        _assert_exact(rp, rv)
+
+    def test_wide_batch_takes_kernel_unforced(self):
+        """A 512-rank torus engages the fused kernel through the normal
+        adaptive routing (no forcing) and still matches exactly."""
+        with compat.x64_mode(True):
+            kw = dict(dims=(8, 8, 8), theta=4, n_threads=2, n_vcis=2,
+                      local_shape=(64, 64, 64))
+            rp = sim.simulate_stencil("part", engine="pallas", **kw)
+            rv = sim.simulate_stencil("part", engine="vector", **kw)
+            assert rp.rank_tts_s == rv.rank_tts_s
+            _assert_exact(rp, rv)
+
+    def test_narrow_batch_takes_scalar_fallback(self, monkeypatch):
+        """Below the adaptive cutoffs PallasFabric must not launch a
+        kernel: with kernel construction sabotaged, a tiny scenario
+        still completes (via the inherited scalar path) and matches."""
+        def _boom(_meta):
+            raise AssertionError("kernel launched for a narrow batch")
+        monkeypatch.setattr(fp, "_build_call", _boom)
+        with compat.x64_mode(True):
+            kw = dict(n_threads=1, theta=2, part_bytes=64, n_vcis=1,
+                      ready=_ready(1, 2, 9))
+            rp = sim.simulate("part", engine="pallas", **kw)
+            rv = sim.simulate("part", engine="vector", **kw)
+            _assert_exact(rp, rv)
+
+
+class TestFloat32Tolerance:
+    """Without x64 the engine is tolerance-gated, counters stay exact."""
+
+    @pytest.mark.parametrize("ap", PIPELINED)
+    def test_stencil(self, ap, forced_scans):
+        with compat.x64_mode(False):
+            kw = dict(dims=(2, 2, 2), theta=4, n_threads=2, n_vcis=2,
+                      local_shape=(24, 8, 4), ready=_ready(2, 4, 11))
+            rp = sim.simulate_stencil(ap, engine="pallas", **kw)
+        rv = sim.simulate_stencil(ap, engine="vector", **kw)
+        assert rp.sent_per_rank == rv.sent_per_rank
+        np.testing.assert_allclose(rp.rank_tts_s, rv.rank_tts_s,
+                                   rtol=F32_RTOL)
+        _assert_close(rp, rv)
+
+
+class TestGridPath:
+    """The fused whole-grid path vs the per-point engines."""
+
+    POINTS = [dict(approach=ap, dims=d, theta=4, n_threads=2, n_vcis=2,
+                   local_shape=(64, 64, 64), bytes_per_cell=8.0)
+              for ap in ("pt2pt_single", "part", "pt2pt_many")
+              for d in ((2, 2, 2), (3, 2, 2))]
+
+    def test_grid_matches_per_point_x64(self):
+        with compat.x64_mode(True):
+            results = sim.simulate_stencil_grid(self.POINTS,
+                                                engine="pallas")
+            for p, r in zip(self.POINTS, results):
+                rv = sim.simulate_stencil(engine="vector", **p)
+                assert r is not None
+                assert r.rank_tts_s == rv.rank_tts_s
+                assert r.sent_per_rank == rv.sent_per_rank
+                assert r.face_bytes == rv.face_bytes
+                _assert_exact(r, rv)
+
+    def test_grid_matches_jax_engine_bitwise(self):
+        """Same grid through both compiled engines: identical records,
+        so BENCH speedups compare equal outputs."""
+        with compat.x64_mode(True):
+            rp = sim.simulate_stencil_grid(self.POINTS, engine="pallas")
+            rj = sim.simulate_stencil_grid(self.POINTS, engine="jax")
+            for a, b in zip(rp, rj):
+                assert a.rank_tts_s == b.rank_tts_s
+                _assert_exact(a, b)
+
+    def test_dependent_traffic_falls_back_to_none(self):
+        with compat.x64_mode(True):
+            pts = [dict(self.POINTS[0], approach="rma_many_passive")]
+            assert sim.simulate_stencil_grid(pts, engine="pallas") \
+                == [None]
+
+    def test_arrivals_mode_matches_jax_grid(self):
+        """The in-kernel arrivals output (the non-affine-finish escape
+        hatch) equals the jax engine's grid arrivals bit-for-bit."""
+        with compat.x64_mode(True):
+            items, _ = _grid_items(self.POINTS)
+            got = fp.transmit_grid(items)
+            ref = fj.transmit_grid(items)
+            for g, r in zip(got, ref):
+                assert np.array_equal(np.asarray(g), np.asarray(r))
+
+    def test_bucket_grid_layout_matches_fused(self, monkeypatch):
+        """REPRO_PALLAS_GRID=bucket (one program instance per scan
+        bucket — the compiled-TPU layout) produces bit-identical rank
+        finish times to the default fused single program."""
+        with compat.x64_mode(True):
+            items, fins = _grid_items(self.POINTS)
+            assert all(f is not None for f in fins)
+            fp.clear_memos()
+            fused = fp.transmit_grid_finish(items, fins)
+            monkeypatch.setenv("REPRO_PALLAS_GRID", "bucket")
+            fp.clear_memos()
+            bucket = fp.transmit_grid_finish(items, fins)
+            monkeypatch.delenv("REPRO_PALLAS_GRID")
+            fp.clear_memos()
+            for a, b in zip(fused, bucket):
+                assert np.array_equal(a, b)
+
+    def test_run_records_batched(self):
+        """The experiments layer's batched pallas records equal the
+        per-point runner's (exact under x64, tolerance in f32)."""
+        from repro.experiments.engine import (run_records_batched,
+                                              run_stencil)
+        batched = run_records_batched("stencil", self.POINTS,
+                                      engine="pallas")
+        assert batched is not None and all(m is not None for m in batched)
+        for p, metrics in zip(self.POINTS, batched):
+            ref = run_stencil(p, engine="vector")
+            assert metrics["n_messages"] == ref["n_messages"]
+            assert metrics["time_us"] == pytest.approx(
+                ref["time_us"], rel=10 * F32_RTOL, abs=1e-9)
+
+    def test_batched_path_declines_other_runners(self):
+        from repro.experiments.engine import run_records_batched
+        assert run_records_batched("halo", [], engine="pallas") is None
+
+
+class TestInterpretResolver:
+    """The shared lazy REPRO_PALLAS_INTERPRET resolver (satellite of
+    the fused kernel: one switch for kernels/ops.py and the fabric)."""
+
+    def test_force_interpret_round_trip(self):
+        base = rt.interpret_mode()
+        with rt.force_interpret(True):
+            assert rt.interpret_mode() is True
+            with rt.force_interpret(False):
+                assert rt.interpret_mode() is False
+            assert rt.interpret_mode() is True
+        assert rt.interpret_mode() is base
+
+    def test_kernel_matches_across_modes(self, forced_scans):
+        """Interpret on/off must not change results (on CPU both
+        resolve to the interpreted XLA path; on accelerators this
+        diffs the compiled kernel against interpret)."""
+        with compat.x64_mode(True):
+            kw = dict(dims=(2, 2, 2), theta=4, n_threads=2, n_vcis=2,
+                      local_shape=(24, 8, 4), ready=_ready(2, 4, 13))
+            with rt.force_interpret(True):
+                fp.clear_memos()
+                ri = sim.simulate_stencil("part", engine="pallas", **kw)
+            fp.clear_memos()
+            rv = sim.simulate_stencil("part", engine="vector", **kw)
+            assert ri.rank_tts_s == rv.rank_tts_s
+            _assert_exact(ri, rv)
+
+
+class TestWeakScalingXXL:
+    """Acceptance: the 32768-rank tier is tractable in tier-1."""
+
+    def test_32k_rank_smoke_under_budget(self):
+        from repro.experiments import SPECS, compare_to_baseline, run_spec
+        spec = SPECS["weak_scaling_xxl"]
+        t0 = time.perf_counter()
+        results = run_spec(spec, mode="smoke", engine="pallas")
+        wall = time.perf_counter() - t0
+        assert wall < 60.0, f"32768-rank smoke tier took {wall:.1f}s"
+        assert any("dims=32x32x32" in k for k in results)
+        baseline = json.loads(
+            (pathlib.Path(__file__).resolve().parent.parent /
+             "BENCH_scenarios.json").read_text())
+        violations = compare_to_baseline(
+            baseline, {"weak_scaling_xxl": results})
+        assert not violations, "\n".join(violations)
+
+    @pytest.mark.slow
+    def test_32k_rank_full_grid_matches_jax(self):
+        """Full XXL grid (12 records, ~6.3M wire messages) through both
+        compiled engines: records bit-identical under x64."""
+        from repro.experiments import SPECS, run_spec
+        from repro.experiments.engine import _CACHE
+        spec = SPECS["weak_scaling_xxl"]
+        with compat.x64_mode(True):
+            _CACHE.clear()
+            rp = run_spec(spec, mode="full", engine="pallas")
+            rj = run_spec(spec, mode="full", engine="jax")
+        assert set(rp) == set(rj) and len(rp) == 12
+        for key in rp:
+            for metric, val in rp[key].items():
+                assert val == rj[key][metric], (key, metric)

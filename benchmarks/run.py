@@ -1,6 +1,6 @@
 """Benchmark harness entry point — one module per paper table/figure,
 plus the post-paper scenario drivers (steady-state, halo, N-D stencil,
-load imbalance).
+load imbalance, open-loop serving).
 
 Prints ``name,us_per_call,derived`` CSV.  Simulator-based figures and
 scenarios run in milliseconds; ``--fast`` skips everything that reads or
@@ -9,7 +9,7 @@ the roofline_report artifact scan).  ``--seed N`` threads a seed to the
 imbalance scenario so JSON output is reproducible run-to-run.
 
 ``--json [PATH]`` additionally writes the scenario results (steady-state,
-halo, stencil, imbalance sweeps) as a JSON document (default:
+halo, stencil, imbalance, serving sweeps) as a JSON document (default:
 benchmark_results.json).  Grid sweeps with golden-baseline checking live
 in ``benchmarks.sweep``.
 """
@@ -19,10 +19,12 @@ import sys
 
 from . import (fig4_latency, fig5_congestion, fig6_vci, fig7_aggregation,
                fig8_earlybird, jax_earlybird, roofline_report, scen_halo,
-               scen_imbalance, scen_steady, scen_stencil, tableA_delayrate)
+               scen_imbalance, scen_serving, scen_steady, scen_stencil,
+               tableA_delayrate)
 from .common import emit
 
-SCENARIOS = (scen_steady, scen_halo, scen_stencil, scen_imbalance)
+SCENARIOS = (scen_steady, scen_halo, scen_stencil, scen_imbalance,
+             scen_serving)
 
 
 def _json_path(argv) -> str:

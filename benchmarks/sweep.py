@@ -80,8 +80,10 @@ BENCH_SPEC_ENGINES = {"weak_scaling_xxl": ("jax", "pallas")}
 # a whole candidate grid of mostly tiny (scalar-path) scenarios per
 # record, so its wall time measures planner overhead, not fabric
 # throughput — including it would dilute the vector/reference ratio the
-# regression gate tracks.
-BENCH_EXCLUDED_RUNNERS = ("autotune",)
+# regression gate tracks.  The serving runner's wall time is likewise
+# dominated by the Python-side admission loop (per-wave intent building
+# and heap scheduling), not the fabric scans.
+BENCH_EXCLUDED_RUNNERS = ("autotune", "serving")
 # Grids below this many simulated wire messages finish in a handful of
 # milliseconds, where the vector/reference ratio is timer noise (and the
 # adaptive routing sends them down the scalar path anyway, pinning the
@@ -321,8 +323,8 @@ def main(argv=None) -> int:
         skipped = [s.name for s in specs
                    if s.runner in BENCH_EXCLUDED_RUNNERS]
         if skipped:
-            print(f"# bench excludes {', '.join(skipped)} (runner measures"
-                  " planner overhead, not fabric throughput)",
+            print(f"# bench excludes {', '.join(skipped)} (runner wall time"
+                  " measures orchestration overhead, not fabric throughput)",
                   file=sys.stderr)
         specs = [s for s in specs if s.runner not in BENCH_EXCLUDED_RUNNERS]
         doc = run_bench_engine(specs, mode, engines)

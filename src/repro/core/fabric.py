@@ -26,6 +26,12 @@ Two interchangeable engines implement that model:
     NumPy op batch per step.  A 512-rank stencil (3072 flows, tens of
     thousands of messages) runs in a few dozen vector steps.
 
+Both engines also expose a streaming entry point, ``advance``: one call
+per *admission wave* of an open-loop workload, with all resource state
+(warm VCIs, busy NICs and wires) carried between calls — the serving
+driver (:func:`repro.core.simulator.simulate_serving`) admits traffic
+as it arrives instead of presenting the whole batch up front.
+
 Bit-for-bit contract: the batched engine performs *the same IEEE-754
 operations in the same order per resource* as the scalar engine — the
 queue recurrence ``t[i] = max(ready[i], t[i-1]) + cost[i]`` is evaluated
@@ -188,6 +194,34 @@ class ReferenceFabric:
         self.sent_per_rank[src] += 1
         return t3 + cfg.alpha_wire + cfg.alpha_recv
 
+    def advance(self, t_ready: np.ndarray, nbytes: np.ndarray,
+                vci: np.ndarray, thread: np.ndarray,
+                put: np.ndarray, am_copy: np.ndarray,
+                src: np.ndarray, dst: np.ndarray, *,
+                layout_key=None) -> np.ndarray:
+        """Admit one *wave* of messages into the live fabric.
+
+        The online entry point of the open-loop serving path: instead of
+        requiring the whole traffic batch up front (``transmit_arrays``
+        on the batched engines), a driver feeds traffic as it arrives —
+        each call is one admission wave, rows already in the wave's
+        processing order (stable-sorted by ``t_ready``, exactly like the
+        closed-loop merge).  All resource state persists between calls,
+        so a sequence of waves composes into one long run: the k-th wave
+        sees VCIs/NICs/wires still busy from wave k-1.  The scalar
+        engine processes a wave one :meth:`transmit` at a time; the
+        batched engines override this with their staged paths —
+        bit-for-bit identical by the engine contract.  ``layout_key``
+        names the wave's layout class for engines that memoize stage
+        layouts (the jax/pallas engines); it is ignored here.
+        """
+        return np.array([
+            self.transmit(float(t_ready[i]), float(nbytes[i]),
+                          int(vci[i]), int(thread[i]),
+                          put=bool(put[i]), am_copy=bool(am_copy[i]),
+                          src=int(src[i]), dst=int(dst[i]))
+            for i in range(t_ready.shape[0])])
+
 
 class CappedMemo:
     """Tiny process-level LRU memo shared by the engines' layout caches.
@@ -301,12 +335,27 @@ class Fabric(ReferenceFabric):
 
     def _transmit_scalar(self, t_ready, nbytes, vci, thread, put, am_copy,
                          src, dst) -> np.ndarray:
-        return np.array([
-            self.transmit(float(t_ready[i]), float(nbytes[i]),
-                          int(vci[i]), int(thread[i]),
-                          put=bool(put[i]), am_copy=bool(am_copy[i]),
-                          src=int(src[i]), dst=int(dst[i]))
-            for i in range(t_ready.shape[0])])
+        # the reference engine's wave loop IS the scalar fallback
+        return ReferenceFabric.advance(self, t_ready, nbytes, vci, thread,
+                                       put, am_copy, src, dst)
+
+    def advance(self, t_ready: np.ndarray, nbytes: np.ndarray,
+                vci: np.ndarray, thread: np.ndarray,
+                put: np.ndarray, am_copy: np.ndarray,
+                src: np.ndarray, dst: np.ndarray, *,
+                layout_key=None) -> np.ndarray:
+        """Online wave admission on the batched engine.
+
+        Same contract as :meth:`ReferenceFabric.advance` — state carries
+        across waves — routed through :meth:`transmit_arrays`, so a wide
+        wave takes the staged grouped scans and a narrow one falls back
+        to the scalar path (bit-identical either way).  The jax/pallas
+        engines inherit this and supply their own ``transmit_arrays``,
+        giving all four engines one streaming entry point.
+        """
+        return self.transmit_arrays(t_ready, nbytes, vci, thread, put,
+                                    am_copy, src, dst,
+                                    layout_key=layout_key)
 
     def transmit_arrays(self, t_ready: np.ndarray, nbytes: np.ndarray,
                         vci: np.ndarray, thread: np.ndarray,

@@ -33,6 +33,13 @@ Stage layouts are pure functions of the batch's (src, dst, vci) columns;
 they are memoized per merge-equivalence key (the same key that memoizes
 the stable merge sort in :mod:`repro.core.simulator`), so re-running a
 scenario re-pays neither the sorts nor the grouping.
+
+Streaming: the online ``advance`` path (inherited from
+:class:`~repro.core.fabric.Fabric`) routes each admission wave of the
+open-loop serving driver through ``transmit_arrays`` on the live warm
+fabric — scalar state is authoritative between calls, and the pow2
+depth quantization keeps repeated waves of nearby sizes on shared jit
+traces instead of recompiling per wave.
 """
 
 from __future__ import annotations

@@ -53,7 +53,13 @@ Scenario drivers build on the same engine:
   * :func:`simulate_imbalance` — a ring exchange where every rank's
     per-partition compute times are drawn from a
     :class:`~repro.core.perfmodel.Workload`'s (eps, delta) noise model,
-    closing the loop between the analytic model and this engine.
+    closing the loop between the analytic model and this engine;
+  * :func:`simulate_serving` — the *open-loop* scenario: seeded request
+    traces (:mod:`repro.core.arrivals`) push pipeline-parallel decode
+    flows through the schedules on a live fabric via the engines'
+    streaming ``advance`` path, multi-tenant flows sharing VCIs/NICs;
+    the metrics are tail latency (p50/p99/p999) and goodput versus
+    offered load.
 
 Calibration targets (validated in tests/test_simulator.py):
   fig 4: single-message small latency ~1.2 us; part==single; old-AM worse.
@@ -65,11 +71,13 @@ Calibration targets (validated in tests/test_simulator.py):
 
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .arrivals import make_trace
 from .fabric import (US, DEFAULT_NET, CappedMemo, Fabric, IntentBatch,
                      NetConfig, ReferenceFabric)
 from .partition import PartitionedRequest
@@ -1367,6 +1375,187 @@ def simulate_imbalance(approach: str, *, n_ranks: int, workload, theta: int,
                                theta, part_bytes),
                            rank_tts_s=r.rank_tts_s, time_s=r.time_s,
                            tts_s=r.tts_s, n_messages=r.n_messages)
+
+
+def _tail_quantile(values: np.ndarray, q: float) -> float:
+    """Order-statistic quantile: the smallest sample at or above rank
+    ``q * (n - 1)``.  Always an actual sample (no interpolation), so the
+    committed tail metrics are reproducible across numpy versions."""
+    n = values.shape[0]
+    k = min(n - 1, int(np.ceil(q * (n - 1))))
+    return float(np.sort(values)[k])
+
+
+@dataclass
+class ServingResult:
+    """Open-loop trace-driven serving run: tail latency + goodput."""
+    approach: str
+    arrival: str               # arrival model name (repro.core.arrivals)
+    n_requests: int
+    n_tenants: int
+    n_stages: int
+    offered_rps: float         # empirical offered load of the trace
+    latency_s: np.ndarray      # per-request arrival -> last-stage latency
+    tts_s: float               # absolute completion of the last request
+    n_messages: int
+    n_waves: int               # admission waves fed to fab.advance
+
+    @property
+    def goodput_rps(self) -> float:
+        """Completed requests per second of *fabric* time: requests over
+        the first-arrival -> last-completion makespan.  Tracks the
+        offered load while the fabric keeps up and saturates at the
+        fabric's drain rate once queueing compounds."""
+        return self.n_requests / self.tts_s if self.tts_s > 0.0 else 0.0
+
+    @property
+    def p50_s(self) -> float:
+        return _tail_quantile(self.latency_s, 0.50)
+
+    @property
+    def p99_s(self) -> float:
+        return _tail_quantile(self.latency_s, 0.99)
+
+    @property
+    def p999_s(self) -> float:
+        return _tail_quantile(self.latency_s, 0.999)
+
+    def as_dict(self) -> dict:
+        return {
+            "scenario": "serving",
+            "approach": self.approach,
+            "arrival": self.arrival,
+            "n_requests": self.n_requests,
+            "n_tenants": self.n_tenants,
+            "n_stages": self.n_stages,
+            "offered_rps": self.offered_rps,
+            "goodput_rps": self.goodput_rps,
+            "mean_us": float(self.latency_s.mean()) / US,
+            "p50_us": self.p50_s / US,
+            "p99_us": self.p99_s / US,
+            "p999_us": self.p999_s / US,
+            "tts_us": self.tts_s / US,
+            "n_messages": self.n_messages,
+            "n_waves": self.n_waves,
+        }
+
+
+def simulate_serving(approach: str, *, arrival: str = "poisson",
+                     rate_rps: float, n_requests: int, n_tenants: int = 1,
+                     skew: float = 0.0, n_stages: int = 4, theta: int,
+                     part_bytes: float, n_vcis: int = 1,
+                     aggr_bytes: float = 0.0, compute_us: float = 0.0,
+                     window_us: float = 5.0, seed: int = 0,
+                     cfg: NetConfig = DEFAULT_NET,
+                     engine: str = "vector") -> ServingResult:
+    """Open-loop serving: a request trace drives pipeline-parallel decode
+    flows through one schedule on a live fabric.
+
+    Requests arrive on the trace's clock (:func:`repro.core.arrivals
+    .make_trace` — Poisson, bursty, or multi-tenant; fully seeded, no
+    wall-clock).  Each request is a decode step crossing ``n_stages``
+    pipeline stages (ranks): hop k is one flow of the chosen schedule
+    from stage k to k+1, ``theta`` partitions of ``part_bytes`` each
+    (the per-stage activation split — KV-head/chunk partitions as in
+    ``repro.core.flash_decode``), with hop k+1 starting when hop k's
+    last partition lands.  ``compute_us`` staggers partition readiness
+    linearly across theta (the decode kernel emitting partitions
+    progressively), which is what the partitioned path overlaps.
+
+    Admission is in *waves*: every scheduler tick (``window_us``), all
+    flows whose start time falls inside the tick are built, merged by a
+    stable sort on t_ready (identical tie-breaks to the closed-loop
+    merge) and fed to the engines' streaming ``advance`` path — the
+    fabric's warm VCI/NIC/wire state carries across waves, so queueing
+    from one wave delays the next exactly as in one long scalar run.
+    The wave loop, columns and finish arithmetic are engine-independent:
+    only ``fab.advance`` differs, which is why the batched engines stay
+    bit-for-bit with the reference oracle here too.
+
+    Multi-tenant sharing: tenant i's flows are stamped thread ``tenant``
+    (each tenant drives its own progress thread per stage, so tenants
+    interleaving on a shared VCI pay the ``chi_switch`` lock bounce of
+    §4.2.1) and VCI offset ``+ tenant`` (the per-communicator VCI hash:
+    tenants rotate over the VCI bank instead of piling onto VCI 0).
+    Dependent-traffic schedules (RMA epochs) run whole at admission
+    time, message-by-message on the shared fabric, unstamped.
+
+    Returns per-request latencies (arrival to last-stage delivery) with
+    p50/p99/p999 tails and goodput — completion throughput — to plot
+    against the offered load.
+    """
+    if n_stages < 2:
+        raise ValueError("n_stages must be at least 2 (one pipeline hop)")
+    sched = _lookup(approach)
+    trace = make_trace(arrival, rate_rps, n_requests, n_tenants=n_tenants,
+                       skew=skew, seed=seed)
+    fab = _make_fabric(engine, cfg, n_vcis, n_ranks=n_stages)
+    ready = np.zeros((1, theta))
+    if compute_us > 0.0:
+        # partition j ready at (j+1)/theta of the per-hop decode compute
+        ready[0] = np.arange(1, theta + 1) * (compute_us * US / theta)
+    window = window_us * US
+    # (start time, request, hop): the heap key is total, so pop order —
+    # and with it every downstream tie-break — is deterministic.
+    pending: List[Tuple[float, int, int]] = [
+        (float(t), r, 0) for r, t in enumerate(trace.t)]
+    heapq.heapify(pending)
+    done = np.zeros(len(trace))
+    n_waves = 0
+    while pending:
+        horizon = pending[0][0] + window
+        wave = []
+        while pending and pending[0][0] <= horizon:
+            wave.append(heapq.heappop(pending))
+        n_waves += 1
+        flows: List[Scenario] = []
+        entries: List[Tuple[int, int]] = []
+        cols = []
+        completions: List[Tuple[int, int, float]] = []
+        for t_start, req, hop in wave:
+            sc = Scenario(n_threads=1, theta=theta, part_bytes=part_bytes,
+                          ready=ready, n_vcis=n_vcis, aggr_bytes=aggr_bytes,
+                          cfg=cfg, src=hop, dst=hop + 1, t0=t_start)
+            batch = sched.intent_batch(sc)
+            if batch is None:  # dependent traffic: runs whole, scalar path
+                completions.append((req, hop, sched.run(sc, fab)))
+                continue
+            tenant = int(trace.tenant[req])
+            flows.append(sc)
+            entries.append((req, hop))
+            cols.append((batch.t_ready, batch.nbytes, batch.vci + tenant,
+                         batch.thread + tenant, batch.put, batch.am_copy))
+        if flows:
+            lens = np.array([c[0].shape[0] for c in cols], dtype=np.int64)
+            srcs = np.array([sc.src for sc in flows], dtype=np.int64)
+            dsts = np.array([sc.dst for sc in flows], dtype=np.int64)
+            t_ready = np.concatenate([c[0] for c in cols])
+            order = np.argsort(t_ready, kind="stable")
+            arr = fab.advance(
+                t_ready[order],
+                np.concatenate([c[1] for c in cols])[order],
+                np.concatenate([c[2] for c in cols])[order],
+                np.concatenate([c[3] for c in cols])[order],
+                np.concatenate([c[4] for c in cols])[order],
+                np.concatenate([c[5] for c in cols])[order],
+                np.repeat(srcs, lens)[order], np.repeat(dsts, lens)[order])
+            arrivals = np.empty_like(arr)
+            arrivals[order] = arr
+            finished, _ = _finish_flows(sched, fab, flows, lens, arrivals)
+            completions.extend(
+                (req, hop, t)
+                for (req, hop), t in zip(entries, finished.tolist()))
+        for req, hop, t in completions:
+            if hop + 1 < n_stages - 1:
+                heapq.heappush(pending, (float(t), req, hop + 1))
+            else:
+                done[req] = t
+    return ServingResult(approach=approach, arrival=arrival,
+                         n_requests=len(trace), n_tenants=n_tenants,
+                         n_stages=n_stages,
+                         offered_rps=trace.offered_rps,
+                         latency_s=done - trace.t, tts_s=float(done.max()),
+                         n_messages=fab.n_messages, n_waves=n_waves)
 
 
 def sweep_sizes(approach: str, sizes: Sequence[int], **kw) -> Dict[int, SimResult]:

@@ -167,6 +167,39 @@ def run_imbalance(params: Mapping[str, Any],
             "n_messages": float(r.n_messages)}
 
 
+def run_serving(params: Mapping[str, Any],
+                engine: str = DEFAULT_ENGINE) -> Dict[str, float]:
+    """Open-loop serving: tail latency + goodput at one offered load.
+
+    One record per (approach, arrival model, offered rate) point; the
+    spec's load axis turns the records into a goodput-vs-offered-load
+    and tail-latency-vs-load curve per approach.  Deterministic: the
+    trace is a pure function of (arrival, rate, n, tenants, seed).
+    """
+    r = sim.simulate_serving(params["approach"],
+                             arrival=params.get("arrival", "poisson"),
+                             rate_rps=params["rate_rps"],
+                             n_requests=params["n_requests"],
+                             n_tenants=params.get("n_tenants", 1),
+                             skew=params.get("skew", 0.0),
+                             n_stages=params.get("n_stages", 4),
+                             theta=params.get("theta", 1),
+                             part_bytes=params["part_bytes"],
+                             n_vcis=params.get("n_vcis", 1),
+                             aggr_bytes=params.get("aggr_bytes", 0.0),
+                             compute_us=params.get("compute_us", 0.0),
+                             window_us=params.get("window_us", 5.0),
+                             seed=params.get("seed", 0),
+                             engine=engine)
+    return {"p50_us": r.p50_s / sim.US,
+            "p99_us": r.p99_s / sim.US,
+            "p999_us": r.p999_s / sim.US,
+            "mean_us": float(r.latency_s.mean()) / sim.US,
+            "offered_rps": r.offered_rps,
+            "goodput_rps": r.goodput_rps,
+            "n_messages": float(r.n_messages)}
+
+
 def autotune_desc(params: Mapping[str, Any]) -> pl.ScenarioDesc:
     """A sweep point's scenario description for the planner.
 
@@ -213,6 +246,7 @@ RUNNERS = {
     "halo": run_halo,
     "stencil": run_stencil,
     "imbalance": run_imbalance,
+    "serving": run_serving,
     "autotune": run_autotune,
 }
 
@@ -223,6 +257,7 @@ PRIMARY_METRIC = {
     "halo": "time_us",
     "stencil": "time_us",
     "imbalance": "time_us",
+    "serving": "p99_us",
     "autotune": "auto_time_us",
 }
 

@@ -164,6 +164,22 @@ IMBALANCE = SweepSpec(
     note="per-rank compute noise from the Appendix-A (eps, delta) model",
 )
 
+SERVING = SweepSpec(
+    name="serving",
+    runner="serving",
+    grid={"approach": _CONTENTION_APPROACHES,
+          "arrival": ("poisson", "bursty"),
+          "rate_rps": (8000, 14000, 20000)},
+    fixed={"n_requests": 256, "n_tenants": 4, "n_stages": 4, "theta": 8,
+           "part_bytes": 131072, "n_vcis": 4, "aggr_bytes": 0,
+           "compute_us": 40.0, "window_us": 5.0, "seed": 3},
+    smoke={"approach": ("pt2pt_single", "part"), "arrival": ("poisson",),
+           "rate_rps": (20000,)},
+    baseline_approach="pt2pt_single",
+    note="open-loop serving: seeded traces drive pipeline-parallel decode"
+         " flows, tail latency (p50/p99/p999) + goodput vs offered load",
+)
+
 AUTOTUNE = SweepSpec(
     name="autotune",
     runner="autotune",
@@ -184,7 +200,7 @@ AUTOTUNE = SweepSpec(
 SPECS: Dict[str, SweepSpec] = {
     s.name: s for s in (FIG4, FIG5, FIG6, FIG7, FIG8, STEADY, HALO1D,
                         STENCIL3D, WEAK_SCALING, WEAK_SCALING_XL,
-                        WEAK_SCALING_XXL, IMBALANCE, AUTOTUNE)
+                        WEAK_SCALING_XXL, IMBALANCE, SERVING, AUTOTUNE)
 }
 
 

@@ -63,15 +63,22 @@ class Heartbeat:
     def update(self, step: int):
         self._step = step
 
+    def _stamp(self):
+        tmp = self.path.with_suffix(".tmp")
+        tmp.write_text(json.dumps({"step": self._step,
+                                   "time": time.time(),
+                                   "pid": os.getpid()}))
+        os.replace(tmp, self.path)
+
     def _run(self):
         while not self._stop.wait(self.interval):
-            tmp = self.path.with_suffix(".tmp")
-            tmp.write_text(json.dumps({"step": self._step,
-                                       "time": time.time(),
-                                       "pid": os.getpid()}))
-            os.replace(tmp, self.path)
+            self._stamp()
 
     def __enter__(self):
+        # Stamp synchronously before the thread's first interval elapses:
+        # a watchdog polling a fresh rank must see liveness immediately,
+        # not after ``interval`` seconds of looking stale.
+        self._stamp()
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
         return self
@@ -124,17 +131,26 @@ def run_training_loop(*, step_fn: Callable, state, start_step: int,
 
     ``step_fn(state, batch) -> (state, loss)``; ``state`` is the full
     checkpointable pytree (params + opt state).  Exceptions and
-    preemptions trigger a final synchronous save.
+    preemptions trigger a final synchronous save of the last *completed*
+    step — never a step id that did not finish (a mid-step exception
+    leaves ``state`` at the previous step, and ``num_steps == 0`` has
+    nothing to save at all), and never a duplicate of a periodic save
+    that already covered it.
     """
     straggler = straggler or StragglerMonitor()
     losses: List[float] = []
-    step = start_step
     preempted = False
+    # ``completed`` is the step id the current ``state`` belongs to:
+    # advanced the moment step_fn returns the new state, so the final
+    # save can never stamp stale state with a completed-step id.
+    completed = start_step
+    last_saved: Optional[int] = None
     with PreemptionGuard() as guard:
         try:
             for step in range(start_step, start_step + num_steps):
                 t0 = time.perf_counter()
                 state, loss = step_fn(state, get_batch(step))
+                completed = step + 1
                 loss = float(loss)
                 losses.append(loss)
                 dt = time.perf_counter() - t0
@@ -147,14 +163,16 @@ def run_training_loop(*, step_fn: Callable, state, start_step: int,
                     on_loss(step, loss)
                 if checkpoint_every and (step + 1) % checkpoint_every == 0:
                     checkpointer.save_async(step + 1, state)
+                    last_saved = step + 1
                 if guard.requested:
                     preempted = True
                     break
         finally:
             checkpointer.wait()
-            checkpointer.save_async(step + 1, state)
-            checkpointer.wait()
-    return LoopReport(steps_run=len(losses), final_step=step + 1,
+            if completed > start_step and last_saved != completed:
+                checkpointer.save_async(completed, state)
+                checkpointer.wait()
+    return LoopReport(steps_run=len(losses), final_step=completed,
                       preempted=preempted,
                       straggler_steps=list(straggler.straggler_steps),
                       losses=losses)

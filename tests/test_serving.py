@@ -1,0 +1,216 @@
+"""The open-loop serving scenario: arrival traces, the streaming
+``advance`` path, and the trace-driven driver.
+
+Three layers are pinned here:
+
+* :mod:`repro.core.arrivals` — traces are deterministic pure functions
+  of their parameters (no wall clock), sorted, and rate-calibrated;
+* the fabric-level streaming contract — a message sequence split into
+  arbitrary admission waves through ``Fabric.advance`` (staged scans
+  forced on) equals the scalar oracle's single uninterrupted pass
+  **bit-for-bit**, warm resource state included;
+* :func:`repro.core.simulator.simulate_serving` — the wave-admission
+  driver is differentially tested vector-vs-reference across every
+  approach (the hypothesis suite), and its tail/goodput metrics behave
+  like an open-loop queue (tails ordered, queueing grows with load).
+"""
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # env without hypothesis: deterministic fallback
+    from _hypo import given, settings, st
+
+from repro.core import arrivals as arr
+from repro.core import fabric as fb
+from repro.core import simulator as sim
+
+APPROACHES = sorted(sim.APPROACHES)
+
+SERVE_KW = dict(n_requests=48, n_stages=4, theta=8, part_bytes=131072.0,
+                n_vcis=4, compute_us=40.0, window_us=5.0, seed=3)
+
+
+class TestArrivals:
+    def test_poisson_deterministic_and_sorted(self):
+        a = arr.poisson_trace(1e4, 256, seed=7)
+        b = arr.poisson_trace(1e4, 256, seed=7)
+        assert np.array_equal(a.t, b.t)
+        assert np.all(np.diff(a.t) >= 0.0)
+        assert len(a) == 256 and a.t[0] == 0.0
+
+    def test_seed_changes_trace(self):
+        a = arr.poisson_trace(1e4, 256, seed=0)
+        b = arr.poisson_trace(1e4, 256, seed=1)
+        assert not np.array_equal(a.t, b.t)
+
+    def test_poisson_rate_calibration(self):
+        a = arr.poisson_trace(1e4, 4096, seed=1)
+        assert a.offered_rps == pytest.approx(1e4, rel=0.1)
+
+    def test_bursty_same_mean_rate_heavier_clumping(self):
+        p = arr.poisson_trace(1e4, 4096, seed=2)
+        b = arr.bursty_trace(1e4, 4096, seed=2, burst_mean=8.0)
+        assert b.offered_rps == pytest.approx(p.offered_rps, rel=0.35)
+        # burstiness: the coefficient of variation of gaps must exceed
+        # the exponential's CV of ~1
+        bg, pg = np.diff(b.t), np.diff(p.t)
+        assert bg.std() / bg.mean() > pg.std() / pg.mean()
+
+    def test_multi_tenant_counts_and_merge(self):
+        t = arr.multi_tenant_trace("poisson", 1e4, 257, n_tenants=4, seed=5)
+        assert len(t) == 257
+        assert t.n_tenants == 4
+        assert np.all(np.diff(t.t) >= 0.0)
+        # every tenant got at least one request
+        assert set(np.unique(t.tenant)) == {0, 1, 2, 3}
+
+    def test_skew_concentrates_load(self):
+        t = arr.multi_tenant_trace("poisson", 1e4, 512, n_tenants=4,
+                                   skew=1.5, seed=5)
+        counts = np.bincount(t.tenant, minlength=4)
+        assert counts[0] > counts[3]
+
+    def test_make_trace_dispatch_and_errors(self):
+        assert len(arr.make_trace("bursty", 1e3, 32, seed=0)) == 32
+        with pytest.raises(ValueError, match="unknown arrival model"):
+            arr.make_trace("adversarial", 1e3, 32)
+        with pytest.raises(ValueError):
+            arr.poisson_trace(0.0, 4)
+        with pytest.raises(ValueError):
+            arr.poisson_trace(1e3, 0)
+        with pytest.raises(ValueError):
+            arr.multi_tenant_trace("poisson", 1e3, 2, n_tenants=4)
+
+
+def _random_wave_columns(n, n_ranks, n_vcis, seed):
+    """Random message columns in non-decreasing t_ready order."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_ranks, size=n)
+    dst = (src + 1 + rng.integers(0, n_ranks - 1, size=n)) % n_ranks
+    return dict(
+        t_ready=np.sort(rng.uniform(0.0, 100e-6, size=n)),
+        nbytes=rng.choice([64.0, 2048.0, 16384.0, 262144.0], size=n),
+        vci=rng.integers(0, 2 * n_vcis, size=n),
+        thread=rng.integers(0, 4, size=n),
+        put=rng.random(n) < 0.3,
+        am_copy=rng.random(n) < 0.2,
+        src=src, dst=dst)
+
+
+class TestAdvanceStreaming:
+    """The fabric-level streaming contract behind ``simulate_serving``."""
+
+    @given(n=st.sampled_from([3, 17, 64]),
+           n_waves=st.sampled_from([1, 2, 5]),
+           seed=st.integers(0, 5))
+    @settings(max_examples=30, deadline=None)
+    def test_waves_equal_one_scalar_pass(self, n, n_waves, seed):
+        cols = _random_wave_columns(n, n_ranks=4, n_vcis=2, seed=seed)
+        fv = fb.Fabric(fb.DEFAULT_NET, 2, n_ranks=4)
+        fr = fb.ReferenceFabric(fb.DEFAULT_NET, 2, n_ranks=4)
+        cuts = np.linspace(0, n, n_waves + 1).astype(int)
+        cutoff, par = fb.SCALAR_BATCH_CUTOFF, fb.MIN_GROUP_PARALLELISM
+        fb.SCALAR_BATCH_CUTOFF = fb.MIN_GROUP_PARALLELISM = 0
+        try:  # staged scans forced on: the batched path itself is diffed
+            av = np.concatenate([
+                fv.advance(**{k: v[a:b] for k, v in cols.items()})
+                for a, b in zip(cuts[:-1], cuts[1:])])
+        finally:
+            fb.SCALAR_BATCH_CUTOFF, fb.MIN_GROUP_PARALLELISM = cutoff, par
+        ar = fr.advance(**cols)
+        assert np.array_equal(av, ar)  # bit-for-bit, no tolerance
+        assert fv.n_messages == fr.n_messages == n
+        assert fv.vci_free == fr.vci_free
+        assert fv.vci_last_thread == fr.vci_last_thread
+        assert fv.nic_free == fr.nic_free
+        assert fv.wire_free == fr.wire_free
+
+    def test_empty_wave_is_noop(self):
+        f = fb.Fabric(fb.DEFAULT_NET, 1, n_ranks=2)
+        cols = {k: v[:0] for k, v in
+                _random_wave_columns(4, 2, 1, seed=0).items()}
+        assert f.advance(**cols).shape == (0,)
+        assert f.n_messages == 0
+
+
+def _assert_serving_same(rv, rr):
+    assert np.array_equal(rv.latency_s, rr.latency_s)  # bit-for-bit
+    assert rv.tts_s == rr.tts_s
+    assert rv.n_messages == rr.n_messages
+    assert rv.n_waves == rr.n_waves
+
+
+class TestServingDiff:
+    @given(ap=st.sampled_from(APPROACHES),
+           arrival=st.sampled_from(["poisson", "bursty"]),
+           rate=st.sampled_from([2e3, 10e3, 25e3]),
+           tenants=st.sampled_from([1, 4]),
+           stages=st.sampled_from([2, 4]),
+           seed=st.integers(0, 3))
+    @settings(max_examples=40, deadline=None)
+    def test_bit_for_bit(self, ap, arrival, rate, tenants, stages, seed):
+        kw = dict(SERVE_KW, arrival=arrival, rate_rps=rate,
+                  n_tenants=tenants, n_stages=stages, seed=seed)
+        rv = sim.simulate_serving(ap, engine="vector", **kw)
+        rr = sim.simulate_serving(ap, engine="reference", **kw)
+        _assert_serving_same(rv, rr)
+
+    @given(ap=st.sampled_from(["part", "pt2pt_many", "pt2pt_single"]),
+           rate=st.sampled_from([10e3, 25e3]), seed=st.integers(0, 3))
+    @settings(max_examples=15, deadline=None)
+    def test_staged_scans_forced(self, ap, rate, seed):
+        """Waves through the grouped scans (heuristic off), so the
+        batched streaming path itself is differentially tested — not
+        just the scalar fallback narrow waves would pick."""
+        kw = dict(SERVE_KW, rate_rps=rate, n_tenants=4, seed=seed)
+        cutoff, par = fb.SCALAR_BATCH_CUTOFF, fb.MIN_GROUP_PARALLELISM
+        fb.SCALAR_BATCH_CUTOFF = fb.MIN_GROUP_PARALLELISM = 0
+        try:
+            rv = sim.simulate_serving(ap, engine="vector", **kw)
+        finally:
+            fb.SCALAR_BATCH_CUTOFF, fb.MIN_GROUP_PARALLELISM = cutoff, par
+        rr = sim.simulate_serving(ap, engine="reference", **kw)
+        _assert_serving_same(rv, rr)
+
+
+class TestServingMetrics:
+    def test_tails_ordered_and_dict_shape(self):
+        r = sim.simulate_serving("part", arrival="poisson", rate_rps=10e3,
+                                 n_tenants=4, **SERVE_KW)
+        assert r.p50_s <= r.p99_s <= r.p999_s
+        assert len(r.latency_s) == SERVE_KW["n_requests"]
+        assert np.all(r.latency_s > 0.0)
+        d = r.as_dict()
+        assert d["scenario"] == "serving"
+        for k in ("p50_us", "p99_us", "p999_us", "offered_rps",
+                  "goodput_rps", "n_messages", "n_waves"):
+            assert k in d
+
+    def test_queueing_grows_with_load(self):
+        lo = sim.simulate_serving("pt2pt_single", rate_rps=1e3, **SERVE_KW)
+        hi = sim.simulate_serving("pt2pt_single", rate_rps=40e3, **SERVE_KW)
+        assert hi.p99_s > lo.p99_s
+        # overload: completions fall behind offered arrivals
+        assert hi.goodput_rps < hi.offered_rps
+
+    def test_goodput_tracks_offered_at_light_load(self):
+        r = sim.simulate_serving("part", rate_rps=1e3, **SERVE_KW)
+        assert r.goodput_rps == pytest.approx(r.offered_rps, rel=0.15)
+
+    def test_tenant_contention_on_shared_vcis(self):
+        """Tenants interleaving on one VCI pay the chi_switch bounce:
+        same trace timing, single-VCI fabric, more tenants -> slower."""
+        kw = dict(SERVE_KW, n_vcis=1)
+        one = sim.simulate_serving("pt2pt_many", rate_rps=20e3,
+                                   n_tenants=1, **kw)
+        four = sim.simulate_serving("pt2pt_many", rate_rps=20e3,
+                                    n_tenants=4, **kw)
+        assert four.n_messages == one.n_messages
+        assert float(four.latency_s.mean()) > float(one.latency_s.mean())
+
+    def test_single_hop_pipeline_rejected(self):
+        with pytest.raises(ValueError, match="n_stages"):
+            sim.simulate_serving("part", rate_rps=1e3, n_requests=4,
+                                 n_stages=1, theta=2, part_bytes=64.0)

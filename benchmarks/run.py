@@ -18,13 +18,13 @@ import json
 import sys
 
 from . import (fig4_latency, fig5_congestion, fig6_vci, fig7_aggregation,
-               fig8_earlybird, jax_earlybird, roofline_report, scen_halo,
-               scen_imbalance, scen_serving, scen_steady, scen_stencil,
-               tableA_delayrate)
+               fig8_earlybird, jax_earlybird, roofline_report, scen_faults,
+               scen_halo, scen_imbalance, scen_serving, scen_steady,
+               scen_stencil, tableA_delayrate)
 from .common import emit
 
 SCENARIOS = (scen_steady, scen_halo, scen_stencil, scen_imbalance,
-             scen_serving)
+             scen_serving, scen_faults)
 
 
 def _json_path(argv) -> str:

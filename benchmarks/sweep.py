@@ -82,8 +82,11 @@ BENCH_SPEC_ENGINES = {"weak_scaling_xxl": ("jax", "pallas")}
 # throughput — including it would dilute the vector/reference ratio the
 # regression gate tracks.  The serving runner's wall time is likewise
 # dominated by the Python-side admission loop (per-wave intent building
-# and heap scheduling), not the fabric scans.
-BENCH_EXCLUDED_RUNNERS = ("autotune", "serving")
+# and heap scheduling), not the fabric scans; the fault-injection
+# runners (retransmission rounds, re-agreement epochs, faulty+clean
+# serving pairs) are orchestration-bound the same way.
+BENCH_EXCLUDED_RUNNERS = ("autotune", "serving", "faulty", "membership",
+                          "servingfaults")
 # Grids below this many simulated wire messages finish in a handful of
 # milliseconds, where the vector/reference ratio is timer noise (and the
 # adaptive routing sends them down the scalar path anyway, pinning the

@@ -205,7 +205,7 @@ def plan_sized(sizes: Sequence[float], *, aggr_bytes: float = 0.0,
 
 def plan_auto(total_bytes: float = None, *, sizes: Sequence[float] = None,
               n_threads: int = 1, workload=None, cfg=None,
-              max_parts: int = 512, max_vcis: int = 32):
+              max_parts: int = 512, max_vcis: int = 32, faults=None):
     """Model-chosen plan: the :mod:`repro.core.planner` autotuner picks
     the partition count, aggregation bound and channel count from the
     closed-form performance model, then the matching planner builds the
@@ -223,7 +223,10 @@ def plan_auto(total_bytes: float = None, *, sizes: Sequence[float] = None,
     ``workload`` (a :class:`~repro.core.perfmodel.Workload`) describes
     the compute profile whose ramp the plan should overlap; ``cfg`` a
     :class:`~repro.core.fabric.NetConfig` (defaults to the MeluXina-like
-    calibration).  Returns ``(plan, choice)`` — the immutable
+    calibration).  ``faults`` (a :class:`~repro.core.faults.FaultSpec`)
+    makes the model charge each candidate its expected retransmission
+    cost, shifting the pick away from heavily aggregated plans when the
+    fabric drops partitions.  Returns ``(plan, choice)`` — the immutable
     :class:`CommPlan` plus the :class:`~repro.core.planner.PlanChoice`
     with the model's predicted time and term breakdown.
     """
@@ -236,7 +239,7 @@ def plan_auto(total_bytes: float = None, *, sizes: Sequence[float] = None,
     desc = planner.ScenarioDesc(total_bytes=float(total_bytes),
                                 n_threads=n_threads, workload=workload,
                                 max_parts=max_parts, max_vcis=max_vcis,
-                                **kw)
+                                faults=faults, **kw)
     choice = planner.choose_plan(desc, approaches=("part",))
     if sizes is not None:
         plan = plan_sized(sizes, aggr_bytes=choice.aggr_bytes,

@@ -188,11 +188,20 @@ class ReferenceFabric:
         self.nic_free[src] = t2
         if not am_copy and nbytes > cfg.bcopy_max:
             t2 += 2.0 * cfg.alpha_wire  # rendezvous RTS/CTS round trip
-        t3 = max(t2, self.wire_free.get((src, dst), 0.0)) + nbytes / cfg.beta
+        t3s = max(t2, self.wire_free.get((src, dst), 0.0))
+        t3 = t3s + self._wire_service(t3s, nbytes, src, dst)
         self.wire_free[(src, dst)] = t3
         self.n_messages += 1
         self.sent_per_rank[src] += 1
         return t3 + cfg.alpha_wire + cfg.alpha_recv
+
+    def _wire_service(self, t_start: float, nbytes: float, src: int,
+                      dst: int) -> float:
+        """Wire service time for one message whose transfer starts at
+        ``t_start``.  The seam the fault-injection layer overrides
+        (:mod:`repro.core.faults` degrades link bandwidth inside a time
+        window); the healthy fabric is pure bandwidth."""
+        return nbytes / self.cfg.beta
 
     def advance(self, t_ready: np.ndarray, nbytes: np.ndarray,
                 vci: np.ndarray, thread: np.ndarray,
@@ -406,8 +415,8 @@ class Fabric(ReferenceFabric):
         links = [(c // self.n_ranks, c % self.n_ranks)
                  for c in uniq.tolist()]
         init = np.array([self.wire_free.get(sd, 0.0) for sd in links])
-        out, cur = _queue_scan(t2[order], nbytes[order] / cfg.beta, init,
-                               counts, offsets)
+        out, cur = self._wire_scan(t2[order], nbytes[order], src[order],
+                                   dst[order], init, counts, offsets)
         self.wire_free.update(zip(links, cur.tolist()))
         t3 = np.empty(n)
         t3[order] = out
@@ -417,6 +426,19 @@ class Fabric(ReferenceFabric):
             if c:
                 self.sent_per_rank[r] += c
         return t3 + cfg.alpha_wire + cfg.alpha_recv
+
+    def _wire_scan(self, r: np.ndarray, nbytes_s: np.ndarray,
+                   src_s: np.ndarray, dst_s: np.ndarray,
+                   init: np.ndarray, counts: np.ndarray,
+                   offsets: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Stage-3 grouped scan — the batched counterpart of
+        :meth:`ReferenceFabric._wire_service`.  Inputs are link-major
+        (``r``/``nbytes_s``/``src_s``/``dst_s`` already permuted); the
+        healthy engine's service is pure bandwidth, so the whole service
+        column precomputes and the generic scan applies.  The faulty
+        engine overrides this with a time-dependent per-step factor."""
+        return _queue_scan(r, nbytes_s / self.cfg.beta, init, counts,
+                           offsets)
 
     def _vci_stage(self, t_ready, nbytes, vci, thread, put, am_copy, src):
         """Grouped scan over (src rank, vci) banks with owner tracking."""

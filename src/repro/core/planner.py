@@ -49,6 +49,7 @@ import numpy as np
 
 from . import commplan
 from .fabric import DEFAULT_NET, NetConfig
+from .faults import FaultSpec, expected_retrans_s
 from .perfmodel import TPU_ICI_BETA, TPU_PEAK_FLOPS, Workload
 
 # The API variants the planner chooses between (a subset of the
@@ -73,7 +74,12 @@ class ScenarioDesc:
     (Appendix A) from which the ready ramp and eq-8 delay derive —
     ``None`` means the buffer is ready immediately (no overlap to win).
     ``max_parts``/``max_vcis`` bound the search (hardware VCI count,
-    partition bookkeeping limits).
+    partition bookkeeping limits).  ``faults`` (a
+    :class:`~repro.core.faults.FaultSpec`) makes the predictor charge
+    every candidate its expected retransmission cost: coarse plans
+    retransmit whole buffers on one lost partition, fine plans resend
+    one message — the robustness trade-off the paper's model does not
+    price but the fault-injection engine measures.
     """
     total_bytes: float
     n_threads: int = 1
@@ -81,6 +87,7 @@ class ScenarioDesc:
     cfg: NetConfig = DEFAULT_NET
     max_parts: int = 512
     max_vcis: int = 32
+    faults: Optional[FaultSpec] = None
 
     def __post_init__(self):
         if self.total_bytes <= 0:
@@ -201,7 +208,7 @@ def _drain_term(cands: Dict[str, float]) -> Tuple[str, float]:
     return name, cands[name]
 
 
-def predict(desc: ScenarioDesc, cand: Candidate) -> PlanChoice:
+def _predict_healthy(desc: ScenarioDesc, cand: Candidate) -> PlanChoice:
     """Closed-form predicted time (seconds, compute excluded) of running
     ``cand`` on the scenario, with a named additive term breakdown
     (``sum(t for _, t in choice.terms) == choice.predicted_s``).
@@ -334,14 +341,54 @@ def predict(desc: ScenarioDesc, cand: Candidate) -> PlanChoice:
                       start + spill + drain + tail, terms)
 
 
+def _candidate_messages(desc: ScenarioDesc,
+                        cand: Candidate) -> List[Tuple[float, int, int]]:
+    """The candidate's wire plan as ``(nbytes, partitions, count)``
+    triples — the retransmission unit each approach exposes to the
+    fault model.  pt2pt_single stakes the whole buffer (all ``T *
+    theta`` partitions) on one message; pt2pt_many risks one partition
+    per message; an aggregated part plan risks ``group`` partitions per
+    wire message."""
+    T, theta = desc.n_threads, cand.theta
+    if cand.approach == "pt2pt_single":
+        return [(desc.total_bytes, T * theta, 1)]
+    if cand.approach == "pt2pt_many":
+        return [(desc.part_bytes(theta), 1, T * theta)]
+    M = _n_messages(desc, theta, cand.aggr_bytes)
+    group = math.ceil(T * theta / M)
+    return [(desc.total_bytes / M, group, M)]
+
+
+def predict(desc: ScenarioDesc, cand: Candidate) -> PlanChoice:
+    """:func:`_predict_healthy` plus, when ``desc.faults`` enables
+    partition drops, a named ``retrans`` term: the expected extra
+    occupancy and timeout delay of resending dropped messages
+    (:func:`repro.core.faults.expected_retrans_s`).  With faults absent
+    (or degradation-only — windows shift all candidates alike) the
+    healthy prediction is returned unchanged, so no-fault autotune
+    records are untouched."""
+    choice = _predict_healthy(desc, cand)
+    f = desc.faults
+    if f is None or not f.drops_enabled:
+        return choice
+    extra = expected_retrans_s(_candidate_messages(desc, cand), f, desc.cfg)
+    return PlanChoice(choice.approach, choice.theta, choice.aggr_bytes,
+                      choice.n_vcis, choice.predicted_s + extra,
+                      choice.terms + (("retrans", extra),))
+
+
 # ---------------------------------------------------------------------------
 # The search
 # ---------------------------------------------------------------------------
 
 def _signature(desc: ScenarioDesc, cand: Candidate) -> tuple:
     """Candidates mapping to the same effective wire plan simulate (and
-    predict) identically; keep one representative per signature."""
+    predict) identically; keep one representative per signature.  Under
+    partition drops a pt2pt_single message's loss probability depends on
+    how many partitions it carries, so theta joins its signature."""
     if cand.approach == "pt2pt_single":
+        if desc.faults is not None and desc.faults.drops_enabled:
+            return ("pt2pt_single", cand.theta)
         return ("pt2pt_single",)
     if cand.approach == "pt2pt_many":
         return ("pt2pt_many", cand.theta, min(cand.n_vcis, desc.n_threads))

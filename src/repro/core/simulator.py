@@ -72,6 +72,7 @@ Calibration targets (validated in tests/test_simulator.py):
 from __future__ import annotations
 
 import heapq
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
@@ -80,6 +81,7 @@ import numpy as np
 from .arrivals import make_trace
 from .fabric import (US, DEFAULT_NET, CappedMemo, Fabric, IntentBatch,
                      NetConfig, ReferenceFabric)
+from .faults import DropDraws, FaultSpec, make_faulty_fabric
 from .partition import PartitionedRequest
 from .topology import CartTopology, HaloSpec
 
@@ -1399,6 +1401,8 @@ class ServingResult:
     tts_s: float               # absolute completion of the last request
     n_messages: int
     n_waves: int               # admission waves fed to fab.advance
+    n_retransmits: int = 0     # dropped messages re-queued (faults only)
+    retrans_bytes: float = 0.0  # payload re-sent by those retransmissions
 
     @property
     def goodput_rps(self) -> float:
@@ -1437,6 +1441,8 @@ class ServingResult:
             "tts_us": self.tts_s / US,
             "n_messages": self.n_messages,
             "n_waves": self.n_waves,
+            "n_retransmits": self.n_retransmits,
+            "retrans_bytes": self.retrans_bytes,
         }
 
 
@@ -1446,6 +1452,7 @@ def simulate_serving(approach: str, *, arrival: str = "poisson",
                      part_bytes: float, n_vcis: int = 1,
                      aggr_bytes: float = 0.0, compute_us: float = 0.0,
                      window_us: float = 5.0, seed: int = 0,
+                     faults: Optional[FaultSpec] = None,
                      cfg: NetConfig = DEFAULT_NET,
                      engine: str = "vector") -> ServingResult:
     """Open-loop serving: a request trace drives pipeline-parallel decode
@@ -1483,13 +1490,31 @@ def simulate_serving(approach: str, *, arrival: str = "poisson",
     Returns per-request latencies (arrival to last-stage delivery) with
     p50/p99/p999 tails and goodput — completion throughput — to plot
     against the offered load.
+
+    ``faults`` (a :class:`repro.core.faults.FaultSpec`) perturbs the
+    run: link-degradation windows slow the wire stage, and with
+    ``drop_prob > 0`` each wave's messages face seeded per-partition
+    drops — dropped messages re-enter the live fabric in deterministic
+    retransmission sub-rounds (timeout + exponential backoff) *within*
+    the wave, so their queue contention and backoff delay propagate into
+    the hop's completion and from there into the latency tail.  Drop
+    verdicts draw from ``SeedSequence([faults.seed, wave_index])``, so
+    faulty runs are exactly reproducible and engine-independent; a
+    no-op spec (no drops, no degradations) leaves every byte of the
+    fault-free run unchanged.
     """
     if n_stages < 2:
         raise ValueError("n_stages must be at least 2 (one pipeline hop)")
     sched = _lookup(approach)
     trace = make_trace(arrival, rate_rps, n_requests, n_tenants=n_tenants,
                        skew=skew, seed=seed)
-    fab = _make_fabric(engine, cfg, n_vcis, n_ranks=n_stages)
+    if faults is not None and not faults.is_noop:
+        fab = make_faulty_fabric(engine, cfg, n_vcis, n_stages, faults)
+    else:
+        fab = _make_fabric(engine, cfg, n_vcis, n_ranks=n_stages)
+    drops_on = faults is not None and faults.drops_enabled
+    n_retransmits = 0
+    retrans_bytes = 0.0
     ready = np.zeros((1, theta))
     if compute_us > 0.0:
         # partition j ready at (j+1)/theta of the per-hop decode compute
@@ -1530,17 +1555,49 @@ def simulate_serving(approach: str, *, arrival: str = "poisson",
             srcs = np.array([sc.src for sc in flows], dtype=np.int64)
             dsts = np.array([sc.dst for sc in flows], dtype=np.int64)
             t_ready = np.concatenate([c[0] for c in cols])
-            order = np.argsort(t_ready, kind="stable")
-            arr = fab.advance(
-                t_ready[order],
-                np.concatenate([c[1] for c in cols])[order],
-                np.concatenate([c[2] for c in cols])[order],
-                np.concatenate([c[3] for c in cols])[order],
-                np.concatenate([c[4] for c in cols])[order],
-                np.concatenate([c[5] for c in cols])[order],
-                np.repeat(srcs, lens)[order], np.repeat(dsts, lens)[order])
-            arrivals = np.empty_like(arr)
-            arrivals[order] = arr
+            mnb = np.concatenate([c[1] for c in cols])
+            mvci = np.concatenate([c[2] for c in cols])
+            mth = np.concatenate([c[3] for c in cols])
+            mput = np.concatenate([c[4] for c in cols])
+            mcopy = np.concatenate([c[5] for c in cols])
+            msrc = np.repeat(srcs, lens)
+            mdst = np.repeat(dsts, lens)
+            if not drops_on:
+                order = np.argsort(t_ready, kind="stable")
+                arr = fab.advance(t_ready[order], mnb[order], mvci[order],
+                                  mth[order], mput[order], mcopy[order],
+                                  msrc[order], mdst[order])
+                arrivals = np.empty_like(arr)
+                arrivals[order] = arr
+            else:
+                # Retransmission sub-rounds within the wave: verdicts
+                # are a pure function of (flow-major message id, attempt)
+                # under this wave's seeded draws, so the loop is
+                # engine-independent; each re-entry pays real contention
+                # on the warm fabric plus the backoff delay.
+                p_msg = faults.message_drop_prob(np.rint(mnb / part_bytes))
+                draws = DropDraws(faults, t_ready.shape[0],
+                                  extra=(n_waves,))
+                arrivals = np.empty_like(t_ready)
+                t_cur = t_ready.copy()
+                pend = np.arange(t_ready.shape[0])
+                attempt = 0
+                while pend.size:
+                    order = np.argsort(t_cur[pend], kind="stable")
+                    sel = pend[order]
+                    arr = fab.advance(t_cur[sel], mnb[sel], mvci[sel],
+                                      mth[sel], mput[sel], mcopy[sel],
+                                      msrc[sel], mdst[sel])
+                    drop = draws.dropped(sel, attempt, p_msg[sel])
+                    arrivals[sel[~drop]] = arr[~drop]
+                    if drop.any():
+                        t_cur[sel[drop]] = (
+                            arr[drop] + faults.timeout_us * US
+                            * faults.backoff ** attempt)
+                        n_retransmits += int(drop.sum())
+                        retrans_bytes += float(mnb[sel[drop]].sum())
+                    pend = np.sort(sel[drop])
+                    attempt += 1
             finished, _ = _finish_flows(sched, fab, flows, lens, arrivals)
             completions.extend(
                 (req, hop, t)
@@ -1555,7 +1612,415 @@ def simulate_serving(approach: str, *, arrival: str = "poisson",
                          n_stages=n_stages,
                          offered_rps=trace.offered_rps,
                          latency_s=done - trace.t, tts_s=float(done.max()),
-                         n_messages=fab.n_messages, n_waves=n_waves)
+                         n_messages=fab.n_messages, n_waves=n_waves,
+                         n_retransmits=n_retransmits,
+                         retrans_bytes=retrans_bytes)
+
+
+@dataclass
+class FaultyResult:
+    """Stencil exchange under seeded fault injection: dropped partitions
+    retransmitted through the live queues, degraded links, and the
+    recovery delta against the same scenario on a healthy fabric."""
+    approach: str
+    dims: tuple
+    periodic: tuple
+    face_bytes: tuple
+    drop_prob: float
+    seed: int
+    rank_tts_s: List[float]    # per-rank completion (all faces delivered)
+    time_s: float              # max completion minus compute
+    tts_s: float
+    clean_tts_s: float         # same scenario, fault-free fabric
+    n_messages: int            # wire messages incl. retransmissions
+    n_delivered: int           # planned messages (each delivered once)
+    n_retransmits: int
+    retrans_bytes: float
+    rounds: int                # retransmission rounds until drained
+    goodput_bps: float         # delivered payload bytes / tts
+    clean_goodput_bps: float
+
+    @property
+    def recovery_s(self) -> float:
+        """Fault-induced completion inflation: tts minus the clean tts."""
+        return self.tts_s - self.clean_tts_s
+
+    @property
+    def time_us(self) -> float:
+        return self.time_s / US
+
+    def as_dict(self) -> dict:
+        return {
+            "scenario": "faulty",
+            "approach": self.approach,
+            "dims": list(self.dims),
+            "periodic": list(self.periodic),
+            "face_bytes": list(self.face_bytes),
+            "drop_prob": self.drop_prob,
+            "seed": self.seed,
+            "time_us": self.time_us,
+            "tts_us": self.tts_s / US,
+            "clean_tts_us": self.clean_tts_s / US,
+            "recovery_us": self.recovery_s / US,
+            "n_messages": self.n_messages,
+            "n_delivered": self.n_delivered,
+            "n_retransmits": self.n_retransmits,
+            "retrans_bytes": self.retrans_bytes,
+            "rounds": self.rounds,
+            "goodput_gbps": self.goodput_bps / 1e9,
+            "clean_goodput_gbps": self.clean_goodput_bps / 1e9,
+        }
+
+
+def simulate_faulty(approach: str, *, faults: Optional[FaultSpec],
+                    dims: Sequence[int] = (),
+                    topo: Optional[CartTopology] = None, periodic=True,
+                    theta: int, n_threads: int = 1,
+                    local_shape: Optional[Sequence[int]] = None,
+                    bytes_per_cell: float = 8.0, halo_width: int = 1,
+                    face_bytes: Optional[Sequence[float]] = None,
+                    ready=None, n_vcis: int = 1, aggr_bytes: float = 0.0,
+                    cfg: NetConfig = DEFAULT_NET,
+                    engine: str = "vector") -> FaultyResult:
+    """The stencil exchange of :func:`simulate_stencil` on a faulty
+    fabric (:mod:`repro.core.faults`).
+
+    A message carrying k partitions is dropped with probability
+    ``1 - (1 - drop_prob) ** k`` — whole-message retransmit, so the
+    pt2pt_single bulk message (k = every partition) is both near-certain
+    to drop and maximally expensive to resend, while the partitioned
+    path retransmits only the lost chunks.  Dropped messages re-enter
+    the live VCI/NIC/wire queues after ``timeout_us * backoff**attempt``
+    (measured from the would-be delivery: the sender's ack timeout),
+    paying real queue contention against the next round's traffic; the
+    attempt at ``max_retries`` always succeeds, bounding the run.  Drop
+    verdicts are pre-drawn per (message, attempt) from the spec's
+    ``SeedSequence``, so a run is exactly reproducible and the reference
+    and vector engines stay bit-for-bit.
+
+    Engine handling: a **no-op spec** (no drops, no degradations)
+    delegates straight to :func:`simulate_stencil` on the requested
+    engine — bit-for-bit identical to the fault-free scenario on all
+    four engines by construction.  With active faults the jax/pallas
+    engines fall back to the batched NumPy fabric (retransmission
+    re-entry is data-dependent, which defeats their whole-batch
+    layouts); the result is identical to ``engine="vector"``.
+
+    Schedules with dependent traffic (the RMA epochs) cannot be
+    partition-dropped — their sync messages chain on earlier arrivals —
+    so ``drop_prob > 0`` rejects them; degradation-only specs run every
+    schedule.  ``recovery_s``/``goodput_bps`` compare against the same
+    scenario on a healthy fabric.
+    """
+    if faults is None:
+        faults = FaultSpec()
+    topo, face_bytes, sched, shared_ready, ready_arr = _stencil_setup(
+        approach, dims=dims, topo=topo, periodic=periodic, theta=theta,
+        n_threads=n_threads, local_shape=local_shape,
+        bytes_per_cell=bytes_per_cell, halo_width=halo_width,
+        face_bytes=face_bytes, ready=ready)
+    srcs, dsts, fdims = topo.flow_arrays()
+    payload = float(sum(face_bytes[d] for d in fdims.tolist()))
+    if faults.is_noop:
+        r = simulate_stencil(approach, topo=topo, theta=theta,
+                             n_threads=n_threads, face_bytes=face_bytes,
+                             ready=ready, n_vcis=n_vcis,
+                             aggr_bytes=aggr_bytes, cfg=cfg, engine=engine)
+        goodput = payload / r.tts_s if r.tts_s > 0.0 else 0.0
+        return FaultyResult(
+            approach=approach, dims=r.dims, periodic=r.periodic,
+            face_bytes=r.face_bytes, drop_prob=faults.drop_prob,
+            seed=faults.seed, rank_tts_s=r.rank_tts_s, time_s=r.time_s,
+            tts_s=r.tts_s, clean_tts_s=r.tts_s, n_messages=r.n_messages,
+            n_delivered=r.n_messages, n_retransmits=0, retrans_bytes=0.0,
+            rounds=1, goodput_bps=goodput, clean_goodput_bps=goodput)
+    clean = simulate_stencil(
+        approach, topo=topo, theta=theta, n_threads=n_threads,
+        face_bytes=face_bytes, ready=ready, n_vcis=n_vcis,
+        aggr_bytes=aggr_bytes, cfg=cfg,
+        engine="reference" if engine == "reference" else "vector")
+    fab = make_faulty_fabric(engine, cfg, n_vcis, topo.n_ranks, faults)
+    compute = float(ready_arr.max())
+    n_part = n_threads * theta
+    dim_bytes = [face_bytes[d] / n_part for d in range(topo.n_dims)]
+    scenarios = [Scenario(n_threads=n_threads, theta=theta,
+                          part_bytes=dim_bytes[d], ready=ready_arr[s],
+                          n_vcis=n_vcis, aggr_bytes=aggr_bytes, cfg=cfg,
+                          src=int(s), dst=int(t),
+                          class_key=(d,) if shared_ready else (d, int(s)))
+                 for s, t, d in zip(srcs, dsts, fdims)]
+    if not faults.drops_enabled:
+        # degradation-only: one pass through the faulty fabric — the
+        # generic multi-flow merge handles dependent traffic too
+        incoming = _run_flows(sched, fab, scenarios)
+        rank_tts = [max(arr) if arr else 0.0 for arr in incoming]
+        tts = max(rank_tts)
+        return FaultyResult(
+            approach=approach, dims=topo.dims, periodic=topo.periodic,
+            face_bytes=tuple(face_bytes), drop_prob=faults.drop_prob,
+            seed=faults.seed, rank_tts_s=rank_tts,
+            time_s=tts - compute, tts_s=tts, clean_tts_s=clean.tts_s,
+            n_messages=fab.n_messages, n_delivered=fab.n_messages,
+            n_retransmits=0, retrans_bytes=0.0, rounds=1,
+            goodput_bps=payload / tts if tts > 0.0 else 0.0,
+            clean_goodput_bps=payload / clean.tts_s
+            if clean.tts_s > 0.0 else 0.0)
+    flows: List[Scenario] = []
+    batches: List[IntentBatch] = []
+    memo: Dict[tuple, Optional[IntentBatch]] = {}
+    for sc in scenarios:
+        key = _scenario_class_key(sc)
+        if key not in memo:
+            memo[key] = sched.intent_batch(sc)
+        batch = memo[key]
+        if batch is None:
+            raise ValueError(
+                f"partition drops need pipelinable traffic; approach "
+                f"{approach!r} plans dependent traffic (RMA epochs) — "
+                f"use a degradation-only FaultSpec or a pipelinable "
+                f"approach")
+        flows.append(sc)
+        batches.append(batch)
+    lens = np.array([len(b) for b in batches], dtype=np.int64)
+    t_ready = np.concatenate([b.t_ready for b in batches])
+    nbytes = np.concatenate([b.nbytes for b in batches])
+    vci = np.concatenate([b.vci for b in batches])
+    thread = np.concatenate([b.thread for b in batches])
+    put = np.concatenate([b.put for b in batches])
+    am_copy = np.concatenate([b.am_copy for b in batches])
+    src_col = np.repeat(srcs, lens)
+    dst_col = np.repeat(dsts, lens)
+    flow_pb = np.array([sc.part_bytes for sc in flows])
+    # partitions per message: plans aggregate whole partitions, so the
+    # ratio is integral up to fp wobble; 0-byte syncs round to 0 (immune)
+    pcount = np.rint(nbytes / np.repeat(flow_pb, lens))
+    p_msg = faults.message_drop_prob(pcount)
+    n = int(t_ready.shape[0])
+    draws = DropDraws(faults, n)
+    final = np.empty(n)
+    t_cur = t_ready.copy()
+    pend = np.arange(n)
+    attempt = 0
+    rounds = 0
+    n_retransmits = 0
+    retrans_bytes = 0.0
+    while pend.size:
+        rounds += 1
+        order = np.argsort(t_cur[pend], kind="stable")
+        sel = pend[order]
+        arr = fab.advance(t_cur[sel], nbytes[sel], vci[sel], thread[sel],
+                          put[sel], am_copy[sel], src_col[sel],
+                          dst_col[sel])
+        drop = draws.dropped(sel, attempt, p_msg[sel])
+        final[sel[~drop]] = arr[~drop]
+        if drop.any():
+            t_cur[sel[drop]] = (arr[drop] + faults.timeout_us * US
+                                * faults.backoff ** attempt)
+            n_retransmits += int(drop.sum())
+            retrans_bytes += float(nbytes[sel[drop]].sum())
+        pend = np.sort(sel[drop])
+        attempt += 1
+    finished, _ = _finish_flows(sched, fab, flows, lens, final)
+    rank_arr = np.zeros(topo.n_ranks)
+    np.maximum.at(rank_arr, dsts, finished)
+    rank_tts = rank_arr.tolist()
+    tts = max(rank_tts)
+    return FaultyResult(
+        approach=approach, dims=topo.dims, periodic=topo.periodic,
+        face_bytes=tuple(face_bytes), drop_prob=faults.drop_prob,
+        seed=faults.seed, rank_tts_s=rank_tts, time_s=tts - compute,
+        tts_s=tts, clean_tts_s=clean.tts_s, n_messages=fab.n_messages,
+        n_delivered=n, n_retransmits=n_retransmits,
+        retrans_bytes=retrans_bytes, rounds=rounds,
+        goodput_bps=payload / tts if tts > 0.0 else 0.0,
+        clean_goodput_bps=payload / clean.tts_s
+        if clean.tts_s > 0.0 else 0.0)
+
+
+@dataclass
+class MembershipResult:
+    """Steady-state ring exchange with elastic rank membership: leave /
+    join events trigger CommPlan re-agreement over the surviving grid,
+    and the quiesce + re-plan + warm-up cost is measured in-band."""
+    approach: str
+    n_ranks: int               # initial communicator size
+    n_iters: int
+    n_events: int              # membership events actually processed
+    iter_times_s: List[float]  # per-iteration time minus compute
+    epoch_starts: List[int]    # iteration index opening each epoch
+    quiesce_s: float           # failure detection + drain barriers
+    replan_s: float            # plan_mesh + request rebuild + agreement
+    warmup_s: float            # first post-event iter minus settled iter
+    tts_s: float
+    n_messages: int
+    plan_data: int             # final ElasticPlan.data
+    plan_model: int
+    plan_dropped: int          # final ElasticPlan.dropped_devices
+    grad_accum_factor: int
+
+    @property
+    def reagree_s(self) -> float:
+        """Total re-agreement cost consumed by membership changes."""
+        return self.quiesce_s + self.replan_s
+
+    @property
+    def steady_iter_s(self) -> float:
+        """Settled per-iteration time of the first epoch (the iteration
+        just before the first membership event; the last iteration when
+        no event fired)."""
+        if self.n_events and len(self.epoch_starts) > 1:
+            return self.iter_times_s[max(0, self.epoch_starts[1] - 1)]
+        return self.iter_times_s[-1]
+
+    @property
+    def post_iter_s(self) -> float:
+        """Settled per-iteration time after the last event."""
+        return self.iter_times_s[-1]
+
+    def as_dict(self) -> dict:
+        return {
+            "scenario": "membership",
+            "approach": self.approach,
+            "n_ranks": self.n_ranks,
+            "n_iters": self.n_iters,
+            "n_events": self.n_events,
+            "iter_times_us": [t / US for t in self.iter_times_s],
+            "epoch_starts": list(self.epoch_starts),
+            "quiesce_us": self.quiesce_s / US,
+            "replan_us": self.replan_s / US,
+            "reagree_us": self.reagree_s / US,
+            "warmup_us": self.warmup_s / US,
+            "steady_iter_us": self.steady_iter_s / US,
+            "post_iter_us": self.post_iter_s / US,
+            "tts_us": self.tts_s / US,
+            "n_messages": self.n_messages,
+            "plan_data": self.plan_data,
+            "plan_model": self.plan_model,
+            "plan_dropped": self.plan_dropped,
+            "grad_accum_factor": self.grad_accum_factor,
+        }
+
+
+def simulate_membership(approach: str, *, n_ranks: int, theta: int,
+                        part_bytes: float, faults: Optional[FaultSpec],
+                        n_iters: int, n_threads: int = 1, n_vcis: int = 1,
+                        aggr_bytes: float = 0.0, model_parallel: int = 1,
+                        target_data: Optional[int] = None,
+                        detect_us: float = 100.0, periodic: bool = True,
+                        ready=None, cfg: NetConfig = DEFAULT_NET,
+                        engine: str = "vector") -> MembershipResult:
+    """Elastic membership: a steady-state ring exchange whose communicator
+    shrinks/grows mid-run on the spec's :class:`RankFailure` events.
+
+    Iterations run back-to-back like :func:`simulate_steady_state` (warm
+    fabric, chained epochs).  At each iteration boundary, due events
+    fire: the survivor count changes, the old grid quiesces (``detect_us``
+    failure detection plus a drain barrier), a new mesh is planned with
+    ``runtime.elastic.plan_mesh`` (model-parallel degree fixed, data
+    degree absorbs the loss; ``target_data`` keeps the global batch via
+    gradient accumulation), and the CommPlan is re-agreed over the new
+    grid — persistent-request rebuild (``alpha_init`` +
+    ``alpha_init_msg`` per planned request) plus a log-depth agreement
+    round.  The next epoch starts on a *cold* fabric of the new size, so
+    the first post-event iteration's warm-up is measured, not assumed.
+    Every cost lands on the run's clock: ``tts_s`` includes the
+    re-agreement stall, and ``reagree_s``/``warmup_s`` break it out.
+
+    The driver is deterministic (events are declared, nothing is drawn)
+    and engine-independent by the engines' bit-for-bit contract; drop /
+    degradation entries of the spec are ignored here — the fabric within
+    an epoch is healthy (combine with :func:`simulate_faulty` to study
+    both at once).
+    """
+    from ..runtime.elastic import plan_mesh  # lazy: runtime layer
+    if n_iters <= 0:
+        raise ValueError("n_iters must be positive")
+    if n_ranks < 2:
+        raise ValueError("membership ring needs at least 2 ranks")
+    if faults is None:
+        faults = FaultSpec()
+    sched = _lookup(approach)
+    ready_arr = _normalize_ready(n_threads, theta, ready)
+    compute = float(ready_arr.max())
+    events = []
+    for f in faults.failures:
+        events.append((f.t_fail_us * US, "leave", f.rank))
+        if f.t_recover_us is not None:
+            events.append((f.t_recover_us * US, "join", f.rank))
+    events.sort(key=lambda e: e[0])
+
+    def _setup_cost(n_comm: int) -> float:
+        # per-rank persistent requests for both neighbor flows, then one
+        # allreduce-style CommPlan agreement over the new communicator
+        template = Scenario(n_threads=n_threads, theta=theta,
+                            part_bytes=part_bytes, ready=ready_arr,
+                            n_vcis=n_vcis, aggr_bytes=aggr_bytes, cfg=cfg)
+        n_req = 2 * sched.n_requests(template)
+        agree = 2.0 * cfg.alpha_wire * math.ceil(math.log2(n_comm))
+        return (cfg.alpha_init + cfg.alpha_init_msg * n_req
+                + cfg.barrier(n_comm) + agree)
+
+    n_live = n_ranks
+    plan = plan_mesh(n_live, model_parallel, target_data=target_data)
+    if plan.n_devices < 2:
+        raise ValueError(
+            f"plan over {n_live} devices uses {plan.n_devices}; the ring "
+            f"needs at least 2")
+    fab = _make_fabric(engine, cfg, n_vcis, n_ranks=plan.n_devices)
+    t = _setup_cost(plan.n_devices)
+    quiesce = 0.0
+    replan = 0.0
+    iter_times: List[float] = []
+    epoch_starts = [0]
+    n_messages = 0
+    ev = 0
+    for it in range(n_iters):
+        while ev < len(events) and events[ev][0] <= t:
+            _, kind, _rank = events[ev]
+            ev += 1
+            n_live = n_live - 1 if kind == "leave" \
+                else min(n_ranks, n_live + 1)
+            if n_live < max(2, model_parallel):
+                raise ValueError(
+                    f"membership event leaves {n_live} device(s); need "
+                    f"at least {max(2, model_parallel)}")
+            q = detect_us * US + cfg.barrier(plan.n_devices)
+            plan = plan_mesh(n_live, model_parallel,
+                             target_data=target_data)
+            r_cost = _setup_cost(plan.n_devices)
+            quiesce += q
+            replan += r_cost
+            t += q + r_cost
+            n_messages += fab.n_messages
+            # cold fabric of the new size: the next iteration pays real
+            # warm-up (idle VCIs, empty wires) instead of a modeled one
+            fab = _make_fabric(engine, cfg, n_vcis,
+                               n_ranks=plan.n_devices)
+            epoch_starts.append(it)
+        topo = CartTopology.create((plan.n_devices,), periodic)
+        srcs, dsts, _fdims = topo.flow_arrays()
+        scenarios = [Scenario(n_threads=n_threads, theta=theta,
+                              part_bytes=part_bytes, ready=ready_arr,
+                              n_vcis=n_vcis, aggr_bytes=aggr_bytes,
+                              cfg=cfg, src=int(s), dst=int(d), t0=t,
+                              class_key=(0,))
+                     for s, d in zip(srcs, dsts)]
+        incoming = _run_flows(sched, fab, scenarios)
+        tts = max(max(arr) if arr else 0.0 for arr in incoming)
+        iter_times.append(tts - t - compute)
+        t = tts
+    n_messages += fab.n_messages
+    if len(epoch_starts) > 1 and epoch_starts[-1] < n_iters:
+        warmup = iter_times[epoch_starts[-1]] - iter_times[-1]
+    else:
+        warmup = 0.0
+    return MembershipResult(
+        approach=approach, n_ranks=n_ranks, n_iters=n_iters, n_events=ev,
+        iter_times_s=iter_times, epoch_starts=epoch_starts,
+        quiesce_s=quiesce, replan_s=replan, warmup_s=warmup, tts_s=t,
+        n_messages=n_messages, plan_data=plan.data, plan_model=plan.model,
+        plan_dropped=plan.dropped_devices,
+        grad_accum_factor=plan.grad_accum_factor)
 
 
 def sweep_sizes(approach: str, sizes: Sequence[int], **kw) -> Dict[int, SimResult]:

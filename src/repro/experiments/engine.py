@@ -47,6 +47,7 @@ import tempfile
 from dataclasses import dataclass, field
 from typing import (Any, Dict, List, Mapping, Optional, Sequence, Tuple)
 
+from repro.core import faults as flt
 from repro.core import perfmodel as pm
 from repro.core import planner as pl
 from repro.core import simulator as sim
@@ -200,6 +201,129 @@ def run_serving(params: Mapping[str, Any],
             "n_messages": float(r.n_messages)}
 
 
+def _fault_spec(params: Mapping[str, Any]) -> flt.FaultSpec:
+    """A sweep point's :class:`~repro.core.faults.FaultSpec` from flat
+    (picklable) params — drops only; membership events are built by
+    :func:`run_membership` from its own axes."""
+    return flt.FaultSpec(drop_prob=params.get("fault_rate", 0.0),
+                         timeout_us=params.get("timeout_us", 50.0),
+                         backoff=params.get("backoff", 2.0),
+                         max_retries=params.get("max_retries", 8),
+                         seed=params.get("fault_seed", 0))
+
+
+def run_faulty(params: Mapping[str, Any],
+               engine: str = DEFAULT_ENGINE) -> Dict[str, float]:
+    """Stencil exchange on a lossy fabric: goodput under retransmission.
+
+    ``fault_rate`` is the per-partition drop probability; a
+    ``fault_rate = 0`` point must reproduce the healthy stencil record
+    bit-for-bit (the no-op gate CI holds on all four engines).  The
+    goodput metrics make the paper's trade-off quantitative on the
+    robustness axis: the bulk message stakes every partition on one
+    drop draw and resends the whole buffer, the partitioned plan
+    resends only the lost chunks.
+    """
+    dims = tuple(params["dims"])
+    r = sim.simulate_faulty(params["approach"],
+                            faults=_fault_spec(params),
+                            dims=dims,
+                            periodic=params.get("periodic", True),
+                            theta=params.get("theta", 1),
+                            n_threads=params.get("n_threads", 1),
+                            face_bytes=[params["face_bytes"]] * len(dims),
+                            n_vcis=params.get("n_vcis", 1),
+                            aggr_bytes=params.get("aggr_bytes", 0.0),
+                            engine=engine)
+    return {"tts_us": r.tts_s / sim.US,
+            "clean_tts_us": r.clean_tts_s / sim.US,
+            "recovery_us": r.recovery_s / sim.US,
+            "goodput_gbps": r.goodput_bps / 1e9,
+            "clean_goodput_gbps": r.clean_goodput_bps / 1e9,
+            "n_retransmits": float(r.n_retransmits),
+            "retrans_bytes": float(r.retrans_bytes),
+            "n_rounds": float(r.rounds),
+            "n_messages": float(r.n_messages)}
+
+
+def run_membership(params: Mapping[str, Any],
+                   engine: str = DEFAULT_ENGINE) -> Dict[str, float]:
+    """Elastic membership: rank leave (and optional rejoin) mid-run.
+
+    One :class:`~repro.core.faults.RankFailure` at ``fail_at_us``
+    (``recover_at_us`` > 0 adds the rejoin); the record pins the full
+    re-agreement bill — quiesce, ``runtime.elastic.plan_mesh`` re-plan
+    plus CommPlan rebuild, and the measured cold-fabric warm-up — next
+    to the steady iteration it interrupts.
+    """
+    recover = params.get("recover_at_us", 0.0)
+    failures = (flt.RankFailure(params.get("fail_rank", 0),
+                                t_fail_us=params["fail_at_us"],
+                                t_recover_us=recover or None),)
+    r = sim.simulate_membership(params["approach"],
+                                n_ranks=params["n_ranks"],
+                                theta=params.get("theta", 1),
+                                part_bytes=params["part_bytes"],
+                                faults=flt.FaultSpec(failures=failures),
+                                n_iters=params["n_iters"],
+                                n_threads=params.get("n_threads", 1),
+                                n_vcis=params.get("n_vcis", 1),
+                                aggr_bytes=params.get("aggr_bytes", 0.0),
+                                model_parallel=params.get(
+                                    "model_parallel", 1),
+                                target_data=params.get("target_data"),
+                                detect_us=params.get("detect_us", 100.0),
+                                engine=engine)
+    return {"tts_us": r.tts_s / sim.US,
+            "steady_iter_us": r.steady_iter_s / sim.US,
+            "post_iter_us": r.post_iter_s / sim.US,
+            "reagree_us": r.reagree_s / sim.US,
+            "quiesce_us": r.quiesce_s / sim.US,
+            "replan_us": r.replan_s / sim.US,
+            "warmup_us": r.warmup_s / sim.US,
+            "n_events": float(r.n_events),
+            "plan_data": float(r.plan_data),
+            "plan_dropped": float(r.plan_dropped),
+            "grad_accum_factor": float(r.grad_accum_factor),
+            "n_messages": float(r.n_messages)}
+
+
+def run_servingfaults(params: Mapping[str, Any],
+                      engine: str = DEFAULT_ENGINE) -> Dict[str, float]:
+    """Serving tail latency under partition drops.
+
+    Runs the identical trace with and without the fault spec and records
+    the p99 inflation — what retransmission queue contention costs the
+    tail at one offered load.
+    """
+    kw = dict(arrival=params.get("arrival", "poisson"),
+              rate_rps=params["rate_rps"],
+              n_requests=params["n_requests"],
+              n_tenants=params.get("n_tenants", 1),
+              skew=params.get("skew", 0.0),
+              n_stages=params.get("n_stages", 4),
+              theta=params.get("theta", 1),
+              part_bytes=params["part_bytes"],
+              n_vcis=params.get("n_vcis", 1),
+              aggr_bytes=params.get("aggr_bytes", 0.0),
+              compute_us=params.get("compute_us", 0.0),
+              window_us=params.get("window_us", 5.0),
+              seed=params.get("seed", 0),
+              engine=engine)
+    fr = sim.simulate_serving(params["approach"],
+                              faults=_fault_spec(params), **kw)
+    cr = sim.simulate_serving(params["approach"], **kw)
+    return {"p99_us": fr.p99_s / sim.US,
+            "p99_clean_us": cr.p99_s / sim.US,
+            "p99_inflation": fr.p99_s / cr.p99_s,
+            "mean_us": float(fr.latency_s.mean()) / sim.US,
+            "goodput_rps": fr.goodput_rps,
+            "clean_goodput_rps": cr.goodput_rps,
+            "n_retransmits": float(fr.n_retransmits),
+            "retrans_bytes": float(fr.retrans_bytes),
+            "n_messages": float(fr.n_messages)}
+
+
 def autotune_desc(params: Mapping[str, Any]) -> pl.ScenarioDesc:
     """A sweep point's scenario description for the planner.
 
@@ -248,6 +372,9 @@ RUNNERS = {
     "imbalance": run_imbalance,
     "serving": run_serving,
     "autotune": run_autotune,
+    "faulty": run_faulty,
+    "membership": run_membership,
+    "servingfaults": run_servingfaults,
 }
 
 # Metric a spec's gain derives from, per runner.
@@ -259,6 +386,9 @@ PRIMARY_METRIC = {
     "imbalance": "time_us",
     "serving": "p99_us",
     "autotune": "auto_time_us",
+    "faulty": "tts_us",
+    "membership": "tts_us",
+    "servingfaults": "p99_us",
 }
 
 

@@ -197,10 +197,60 @@ AUTOTUNE = SweepSpec(
          " grid-best, regret per scenario",
 )
 
+FAULTS = SweepSpec(
+    name="faults",
+    runner="faulty",
+    grid={"approach": _CONTENTION_APPROACHES,
+          "fault_rate": (0.0, 0.01, 0.02, 0.05)},
+    fixed={"dims": (4, 4), "face_bytes": 131072, "theta": 8, "n_threads": 1,
+           "n_vcis": 2, "timeout_us": 50.0, "fault_seed": 3},
+    smoke={"approach": ("pt2pt_single", "part"), "fault_rate": (0.0, 0.02)},
+    baseline_approach="pt2pt_single",
+    tolerances={"n_retransmits": 0.0, "n_rounds": 0.0, "retrans_bytes": 0.0},
+    note="goodput under seeded partition drops: the bulk message stakes"
+         " every partition on one draw and resends the whole buffer, the"
+         " partitioned plan resends only the lost chunks",
+)
+
+MEMBERSHIP = SweepSpec(
+    name="membership",
+    runner="membership",
+    grid={"approach": ("pt2pt_single", "part"),
+          "fail_at_us": (60.0, 100.0), "recover_at_us": (0.0, 180.0)},
+    fixed={"n_ranks": 8, "model_parallel": 2, "fail_rank": 3,
+           "theta": 8, "part_bytes": 16384, "n_threads": 1, "n_vcis": 2,
+           "n_iters": 12, "detect_us": 100.0},
+    smoke={"approach": ("part",), "fail_at_us": (60.0,),
+           "recover_at_us": (0.0, 180.0)},
+    tolerances={"n_events": 0.0, "plan_data": 0.0, "plan_dropped": 0.0,
+                "grad_accum_factor": 0.0},
+    note="elastic membership: a rank leaves (and optionally rejoins)"
+         " mid-run, quiesce + plan_mesh re-plan + CommPlan re-agreement"
+         " + cold-fabric warm-up all land on the measured clock",
+)
+
+SERVING_FAULTS = SweepSpec(
+    name="serving_faults",
+    runner="servingfaults",
+    grid={"approach": ("pt2pt_single", "part"),
+          "fault_rate": (0.005, 0.02)},
+    fixed={"arrival": "bursty", "rate_rps": 14000, "n_requests": 96,
+           "n_tenants": 4, "n_stages": 4, "theta": 8, "part_bytes": 131072,
+           "n_vcis": 4, "aggr_bytes": 0, "compute_us": 40.0,
+           "window_us": 5.0, "seed": 3, "timeout_us": 50.0, "fault_seed": 2},
+    smoke={"approach": ("pt2pt_single", "part"), "fault_rate": (0.02,)},
+    baseline_approach="pt2pt_single",
+    tolerances={"n_retransmits": 0.0, "retrans_bytes": 0.0},
+    note="serving tail under drops: whole-buffer retransmits inflate the"
+         " bulk path's p99 several-fold while the partitioned path resends"
+         " single chunks into the same queues",
+)
+
 SPECS: Dict[str, SweepSpec] = {
     s.name: s for s in (FIG4, FIG5, FIG6, FIG7, FIG8, STEADY, HALO1D,
                         STENCIL3D, WEAK_SCALING, WEAK_SCALING_XL,
-                        WEAK_SCALING_XXL, IMBALANCE, SERVING, AUTOTUNE)
+                        WEAK_SCALING_XXL, IMBALANCE, SERVING, AUTOTUNE,
+                        FAULTS, MEMBERSHIP, SERVING_FAULTS)
 }
 
 

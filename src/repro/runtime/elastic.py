@@ -12,15 +12,20 @@ degree absorbs node loss/gain.  On a resize event:
      across the new host count;
   4. the global batch is preserved by raising per-replica batch (or, if
      configured, reduced proportionally with an LR rescale).
+
+``plan_mesh`` is pure arithmetic and deliberately jax-free (the jax
+imports live inside the device-touching functions): the simulator's
+membership driver (:func:`repro.core.simulator.simulate_membership`)
+consumes it to price CommPlan re-agreement without dragging jax into
+the NumPy engines.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Optional
 
-import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+import numpy as np
 
 
 @dataclass(frozen=True)
@@ -54,17 +59,56 @@ def plan_mesh(n_devices: int, model_parallel: int,
                        grad_accum_factor=accum)
 
 
-def build_mesh(plan: ElasticPlan, devices=None) -> Mesh:
-    devices = devices if devices is not None else jax.devices()
+def build_mesh(plan: ElasticPlan, devices=None):
+    """Materialize the plan as a ``jax.sharding.Mesh`` over the first
+    ``plan.n_devices`` of ``devices`` (default: ``jax.devices()``)."""
+    import jax  # local: plan_mesh stays importable without jax
+    from jax.sharding import Mesh
+    devices = list(devices) if devices is not None else jax.devices()
+    if plan.n_devices > len(devices):
+        raise ValueError(
+            f"plan needs {plan.n_devices} devices "
+            f"(data={plan.data} x model={plan.model}) but only "
+            f"{len(devices)} are available — re-plan with "
+            f"plan_mesh({len(devices)}, {plan.model})")
     use = devices[:plan.n_devices]
-    import numpy as np
     return Mesh(np.asarray(use).reshape(plan.data, plan.model),
                 ("data", "model"))
 
 
-def reshard(tree, specs, mesh: Mesh):
-    """device_put a tree onto a (possibly new) mesh — restore-time path."""
+def _is_param_leaf(x) -> bool:
+    """Leaf predicate for :func:`reshard`: an array-like (shape *and*
+    dtype — a plain container holding a ``shape`` attribute is still a
+    container) or an explicit ``None`` hole."""
+    return x is None or (hasattr(x, "shape") and hasattr(x, "dtype")
+                         and not isinstance(x, (list, tuple, dict)))
+
+
+def reshard(tree, specs, mesh):
+    """device_put a tree onto a (possibly new) mesh — restore-time path.
+
+    ``None`` leaves pass through untouched (optimizer slots absent from
+    a checkpoint), everything else lands as ``NamedSharding(mesh,
+    spec)``.  A parameter/spec structure mismatch raises a ``ValueError``
+    naming both structures instead of jax's generic tree error.
+    """
+    import jax  # local: plan_mesh stays importable without jax
+    from jax.sharding import NamedSharding
+
     def put(x, spec):
+        if x is None:
+            return None
         return jax.device_put(x, NamedSharding(mesh, spec))
-    return jax.tree.map(put, tree, specs,
-                        is_leaf=lambda x: x is None or hasattr(x, "shape"))
+
+    # Validate the tree structures with a no-op zip first, so a
+    # mismatch raises the named error below while genuine device_put
+    # failures (divisibility, OOM) surface unchanged.
+    try:
+        jax.tree.map(lambda x, spec: None, tree, specs,
+                     is_leaf=_is_param_leaf)
+    except (ValueError, TypeError) as e:
+        raise ValueError(
+            f"reshard: parameter tree and sharding-spec tree have "
+            f"mismatched structure — every array (or None) leaf of the "
+            f"parameters needs exactly one PartitionSpec ({e})") from e
+    return jax.tree.map(put, tree, specs, is_leaf=_is_param_leaf)

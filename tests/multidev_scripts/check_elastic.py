@@ -1,0 +1,50 @@
+"""Multi-device validation of elastic re-planning: plan_mesh ->
+build_mesh -> reshard across a shrink event (reshard-on-restore)."""
+import os
+
+assert "xla_force_host_platform_device_count" in os.environ.get("XLA_FLAGS", "")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.runtime import elastic
+
+N = jax.device_count()
+assert N == 8, N
+
+# --- full fleet: 8 devices at model_parallel=2 -> 4x2 mesh -----------------
+plan = elastic.plan_mesh(N, 2)
+assert (plan.data, plan.model) == (4, 2)
+mesh = elastic.build_mesh(plan)
+assert mesh.shape == {"data": 4, "model": 2}
+
+params = {"w": jnp.arange(96.0).reshape(24, 4), "b": jnp.ones((4,)),
+          "slot": None}
+specs = {"w": P("data", "model"), "b": P("model"), "slot": P()}
+out = elastic.reshard(params, specs, mesh)
+assert out["slot"] is None
+assert out["w"].sharding == NamedSharding(mesh, P("data", "model"))
+assert out["b"].sharding == NamedSharding(mesh, P("model"))
+np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(params["w"]))
+
+# --- two ranks leave: 6 devices -> 3x2 mesh, same state resharded ----------
+small = elastic.plan_mesh(N - 2, 2, target_data=4)
+assert (small.data, small.model) == (3, 2)
+assert small.grad_accum_factor == 2  # ceil(4 / 3): global batch kept
+mesh2 = elastic.build_mesh(small, devices=jax.devices()[:N - 2])
+out2 = elastic.reshard(out, specs, mesh2)
+assert out2["w"].sharding == NamedSharding(mesh2, P("data", "model"))
+np.testing.assert_array_equal(np.asarray(out2["w"]), np.asarray(params["w"]))
+assert len(out2["w"].sharding.device_set) == 6
+
+# --- plan too big for the surviving devices must refuse loudly -------------
+try:
+    elastic.build_mesh(plan, devices=jax.devices()[:N - 2])
+except ValueError as e:
+    assert "re-plan with plan_mesh(6, 2)" in str(e), e
+else:
+    raise AssertionError("oversized plan must raise")
+
+print("elastic multidev OK")

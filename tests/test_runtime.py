@@ -73,6 +73,51 @@ class TestPlanMesh:
         with pytest.raises(ValueError):
             elastic.plan_mesh(4, 8)
 
+    def test_plan_mesh_importable_without_jax_side_effects(self):
+        # the simulator's membership driver calls plan_mesh from the
+        # NumPy engines; it must be pure arithmetic (no device queries)
+        import inspect
+        assert "jax" not in inspect.getsource(elastic.plan_mesh)
+
+
+class TestBuildMeshAndReshard:
+    """Single-device coverage of the device-touching half of elastic;
+    the multi-device happy path runs in ``check_elastic.py``."""
+
+    def test_build_mesh_rejects_oversized_plan(self):
+        import jax
+        plan = elastic.plan_mesh(8, 2)
+        with pytest.raises(ValueError, match=r"re-plan with plan_mesh\(1, 2\)"):
+            elastic.build_mesh(plan, devices=jax.devices()[:1])
+
+    def test_build_mesh_single_device(self):
+        plan = elastic.plan_mesh(1, 1)
+        mesh = elastic.build_mesh(plan)
+        assert mesh.shape == {"data": 1, "model": 1}
+
+    def test_reshard_none_leaves_pass_through(self):
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        mesh = elastic.build_mesh(elastic.plan_mesh(1, 1))
+        tree = {"w": jnp.ones((4,)), "slot": None}
+        out = elastic.reshard(tree, {"w": P(), "slot": P()}, mesh)
+        assert out["slot"] is None
+        assert float(out["w"].sum()) == 4.0
+
+    def test_reshard_structure_mismatch_raises_named_error(self):
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        mesh = elastic.build_mesh(elastic.plan_mesh(1, 1))
+        tree = {"w": jnp.ones((4,)), "b": jnp.ones((2,))}
+        with pytest.raises(ValueError, match="mismatched structure"):
+            elastic.reshard(tree, {"w": P()}, mesh)
+
+
+@pytest.mark.slow
+def test_elastic_multidev(multidev):
+    out = multidev("check_elastic.py")
+    assert "elastic multidev OK" in out
+
 
 class TestStragglerMonitor:
     def test_no_flag_below_min_samples(self):

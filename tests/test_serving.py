@@ -83,6 +83,17 @@ class TestArrivals:
         with pytest.raises(ValueError):
             arr.multi_tenant_trace("poisson", 1e3, 2, n_tenants=4)
 
+    @pytest.mark.parametrize("n_tenants", [1, 4])
+    def test_unknown_model_error_names_valid_kinds(self, n_tenants):
+        """Both make_trace branches (single- and multi-tenant) must list
+        the registered arrival models in the rejection message."""
+        with pytest.raises(ValueError) as exc:
+            arr.make_trace("mmpp", 1e3, 32, n_tenants=n_tenants)
+        msg = str(exc.value)
+        assert "mmpp" in msg
+        for kind in arr.ARRIVALS:
+            assert kind in msg, f"{kind!r} missing from: {msg}"
+
 
 def _random_wave_columns(n, n_ranks, n_vcis, seed):
     """Random message columns in non-decreasing t_ready order."""

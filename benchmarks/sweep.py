@@ -84,9 +84,10 @@ BENCH_SPEC_ENGINES = {"weak_scaling_xxl": ("jax", "pallas")}
 # dominated by the Python-side admission loop (per-wave intent building
 # and heap scheduling), not the fabric scans; the fault-injection
 # runners (retransmission rounds, re-agreement epochs, faulty+clean
-# serving pairs) are orchestration-bound the same way.
+# serving pairs) are orchestration-bound the same way, and the IR
+# runner's time goes to pass-pipeline guard simulations, not one scan.
 BENCH_EXCLUDED_RUNNERS = ("autotune", "serving", "faulty", "membership",
-                          "servingfaults")
+                          "servingfaults", "ir")
 # Grids below this many simulated wire messages finish in a handful of
 # milliseconds, where the vector/reference ratio is timer noise (and the
 # adaptive routing sends them down the scalar path anyway, pinning the

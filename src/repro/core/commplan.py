@@ -205,7 +205,8 @@ def plan_sized(sizes: Sequence[float], *, aggr_bytes: float = 0.0,
 
 def plan_auto(total_bytes: float = None, *, sizes: Sequence[float] = None,
               n_threads: int = 1, workload=None, cfg=None,
-              max_parts: int = 512, max_vcis: int = 32, faults=None):
+              max_parts: int = 512, max_vcis: int = 32, faults=None,
+              pipeline=None):
     """Model-chosen plan: the :mod:`repro.core.planner` autotuner picks
     the partition count, aggregation bound and channel count from the
     closed-form performance model, then the matching planner builds the
@@ -229,10 +230,22 @@ def plan_auto(total_bytes: float = None, *, sizes: Sequence[float] = None,
     fabric drops partitions.  Returns ``(plan, choice)`` — the immutable
     :class:`CommPlan` plus the :class:`~repro.core.planner.PlanChoice`
     with the model's predicted time and term breakdown.
+
+    ``pipeline`` (a :class:`~repro.core.plan_ir.PassPipeline`) runs the
+    model's pointwise pick through the IR optimization passes and
+    returns the rewritten plan — the pipeline's measured guard keeps a
+    rewrite only when the simulated flow time does not increase, so the
+    returned plan is never worse than the pointwise one.  Uniform form
+    only: the heterogeneous ``sizes`` form has no single partition size
+    for the IR's flow op to carry.
     """
     from . import planner  # deferred: planner imports this module
     if (total_bytes is None) == (sizes is None):
         raise ValueError("pass exactly one of total_bytes or sizes")
+    if pipeline is not None and sizes is not None:
+        raise ValueError("pipeline= applies to the uniform form only;"
+                         " heterogeneous sizes have no single part_bytes"
+                         " for the IR flow op")
     if sizes is not None:
         total_bytes = float(sum(sizes))
     kw = {} if cfg is None else {"cfg": cfg}
@@ -249,4 +262,10 @@ def plan_auto(total_bytes: float = None, *, sizes: Sequence[float] = None,
         plan = plan_uniform(n_part, n_part, total_bytes / n_part,
                             aggr_bytes=choice.aggr_bytes,
                             n_channels=choice.n_vcis)
+        if pipeline is not None:
+            from . import plan_ir  # deferred: plan_ir imports this module
+            plan = plan_ir.optimize_plan(
+                plan, pipeline, n_threads=n_threads,
+                part_bytes=total_bytes / n_part, n_vcis=choice.n_vcis,
+                aggr_bytes=choice.aggr_bytes, cfg=cfg, faults=faults)
     return plan, choice

@@ -246,11 +246,32 @@ SERVING_FAULTS = SweepSpec(
          " single chunks into the same queues",
 )
 
+IR_PASSES = SweepSpec(
+    name="ir_passes",
+    runner="ir",
+    grid={"scenario": ("stencil3d", "serving", "faults"),
+          "n_vcis": (2, 4)},
+    fixed={"theta": 8, "part_bytes": 131072, "arrival": "bursty",
+           "rate_rps": 14000, "n_requests": 96, "n_tenants": 4,
+           "n_stages": 4, "compute_us": 40.0, "seed": 3,
+           "fault_rate": 0.02, "timeout_us": 50.0, "fault_seed": 3},
+    smoke={"scenario": ("stencil3d", "serving", "faults"),
+           "n_vcis": (2,)},
+    tolerances={"n_flows": 0.0, "n_wire_pointwise": 0.0,
+                "n_wire_ir": 0.0, "n_passes_applied": 0.0,
+                "n_retransmits": 0.0},
+    note="IR pass pipeline vs pointwise plan_auto on multi-flow"
+         " scenarios: fuse-faces + global-channels win on the"
+         " strong-scaling stencil, merge-small-flows collapses the"
+         " lossy fabric's timeout exposure; the measured guard pins"
+         " ir_us <= pointwise_us on every record",
+)
+
 SPECS: Dict[str, SweepSpec] = {
     s.name: s for s in (FIG4, FIG5, FIG6, FIG7, FIG8, STEADY, HALO1D,
                         STENCIL3D, WEAK_SCALING, WEAK_SCALING_XL,
                         WEAK_SCALING_XXL, IMBALANCE, SERVING, AUTOTUNE,
-                        FAULTS, MEMBERSHIP, SERVING_FAULTS)
+                        FAULTS, MEMBERSHIP, SERVING_FAULTS, IR_PASSES)
 }
 
 

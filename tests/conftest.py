@@ -30,3 +30,13 @@ def run_multidev(script_name: str, ndev: int = 8, timeout: int = 600,
 @pytest.fixture(scope="session")
 def multidev():
     return run_multidev
+
+
+@pytest.fixture
+def forced_scans():
+    """Route every batch through the staged scans / fused kernels for
+    the duration of one test (see tests/_engines.py for the context
+    manager hypothesis tests use inside their bodies)."""
+    from _engines import forced_scans as _forced
+    with _forced():
+        yield

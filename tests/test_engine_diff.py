@@ -7,8 +7,12 @@ per-resource order as the scalar oracle (grouped scans vectorize across
 resources, never reassociate within one), so exact float equality is the
 contract, and any reordering/reassociation bug fails loudly here.  The
 heuristic that routes narrow batches to the scalar path is also forced
-off (``_staged_fabric``) so the staged scans themselves are exercised on
-small scenarios, not just at 512-rank scale.
+off (``_engines.forced_scans``) so the staged scans themselves are
+exercised on small scenarios, not just at 512-rank scale.
+
+The driver invocation and comparison-field tables live in
+``tests/_engines.py`` — this file owns only the vector-vs-reference
+scenario grids.
 """
 
 import time
@@ -20,25 +24,9 @@ try:
 except ImportError:  # env without hypothesis: deterministic fallback
     from _hypo import given, settings, st
 
-from repro.core import fabric as fb
+from _engines import (APPROACHES, PIPELINED, assert_engines_agree, ready)
 from repro.core import perfmodel as pm
 from repro.core import simulator as sim
-
-APPROACHES = sorted(sim.APPROACHES)
-PIPELINED = ("part", "part_old", "pt2pt_single", "pt2pt_many")
-
-
-def _ready(n_threads, theta, seed):
-    if seed is None:
-        return None
-    rng = np.random.default_rng(seed)
-    return rng.uniform(0.0, 25e-6, size=(n_threads, theta))
-
-
-def _assert_same(rv, rr):
-    assert rv.n_messages == rr.n_messages
-    assert rv.time_s == rr.time_s        # bit-for-bit, no tolerance
-    assert rv.tts_s == rr.tts_s
 
 
 class TestOneShotDiff:
@@ -51,10 +39,9 @@ class TestOneShotDiff:
            seed=st.integers(0, 5))
     @settings(max_examples=60, deadline=None)
     def test_bit_for_bit(self, ap, n, theta, size, vcis, aggr, seed):
-        kw = dict(n_threads=n, theta=theta, part_bytes=size, n_vcis=vcis,
-                  aggr_bytes=aggr, ready=_ready(n, theta, seed))
-        _assert_same(sim.simulate(ap, engine="vector", **kw),
-                     sim.simulate(ap, engine="reference", **kw))
+        assert_engines_agree(
+            "oneshot", ap, n_threads=n, theta=theta, part_bytes=size,
+            n_vcis=vcis, aggr_bytes=aggr, ready=ready(n, theta, seed))
 
 
 class TestSteadyStateDiff:
@@ -65,14 +52,10 @@ class TestSteadyStateDiff:
            vcis=st.sampled_from([1, 4]), seed=st.integers(0, 3))
     @settings(max_examples=40, deadline=None)
     def test_bit_for_bit(self, ap, n, theta, iters, size, vcis, seed):
-        kw = dict(n_iters=iters, n_threads=n, theta=theta, part_bytes=size,
-                  n_vcis=vcis, aggr_bytes=16384,
-                  ready=_ready(n, theta, seed))
-        rv = sim.simulate_steady_state(ap, engine="vector", **kw)
-        rr = sim.simulate_steady_state(ap, engine="reference", **kw)
-        assert rv.iter_times_s == rr.iter_times_s
-        assert rv.setup_s == rr.setup_s
-        assert rv.tts_s == rr.tts_s and rv.n_messages == rr.n_messages
+        assert_engines_agree(
+            "steady", ap, n_iters=iters, n_threads=n, theta=theta,
+            part_bytes=size, n_vcis=vcis, aggr_bytes=16384,
+            ready=ready(n, theta, seed))
 
 
 class TestHaloDiff:
@@ -85,13 +68,10 @@ class TestHaloDiff:
     @settings(max_examples=40, deadline=None)
     def test_bit_for_bit(self, ap, ranks, n, theta, size, vcis, periodic,
                          seed):
-        kw = dict(n_ranks=ranks, theta=theta, part_bytes=size, n_threads=n,
-                  n_vcis=vcis, periodic=periodic,
-                  ready=_ready(n, theta, seed))
-        rv = sim.simulate_halo(ap, engine="vector", **kw)
-        rr = sim.simulate_halo(ap, engine="reference", **kw)
-        assert rv.rank_tts_s == rr.rank_tts_s
-        _assert_same(rv, rr)
+        assert_engines_agree(
+            "halo", ap, n_ranks=ranks, theta=theta, part_bytes=size,
+            n_threads=n, n_vcis=vcis, periodic=periodic,
+            ready=ready(n, theta, seed))
 
 
 class TestStencilDiff:
@@ -102,15 +82,11 @@ class TestStencilDiff:
            periodic=st.booleans(), seed=st.integers(0, 3))
     @settings(max_examples=40, deadline=None)
     def test_bit_for_bit(self, ap, dims, n, theta, vcis, periodic, seed):
-        kw = dict(dims=dims, theta=theta, n_threads=n, n_vcis=vcis,
-                  periodic=periodic, local_shape=(24, 8, 4)[:len(dims)],
-                  ready=_ready(n, theta, seed))
-        rv = sim.simulate_stencil(ap, engine="vector", **kw)
-        rr = sim.simulate_stencil(ap, engine="reference", **kw)
-        assert rv.rank_tts_s == rr.rank_tts_s
-        assert rv.sent_per_rank == rr.sent_per_rank
-        assert rv.face_bytes == rr.face_bytes
-        _assert_same(rv, rr)
+        assert_engines_agree(
+            "stencil", ap, dims=dims, theta=theta, n_threads=n,
+            n_vcis=vcis, periodic=periodic,
+            local_shape=(24, 8, 4)[:len(dims)],
+            ready=ready(n, theta, seed))
 
     @given(ap=st.sampled_from(PIPELINED),
            dims=st.sampled_from([(3, 2), (2, 2, 2)]),
@@ -120,18 +96,10 @@ class TestStencilDiff:
         """Small grids through the staged scans (heuristic disabled), so
         the grouped scans themselves are differentially tested — not
         just the scalar fallback the heuristic would pick here."""
-        kw = dict(dims=dims, theta=theta, n_threads=2, n_vcis=2,
-                  local_shape=(24, 8, 4)[:len(dims)],
-                  ready=_ready(2, theta, seed))
-        cutoff, par = fb.SCALAR_BATCH_CUTOFF, fb.MIN_GROUP_PARALLELISM
-        fb.SCALAR_BATCH_CUTOFF = fb.MIN_GROUP_PARALLELISM = 0
-        try:
-            rv = sim.simulate_stencil(ap, engine="vector", **kw)
-        finally:
-            fb.SCALAR_BATCH_CUTOFF, fb.MIN_GROUP_PARALLELISM = cutoff, par
-        rr = sim.simulate_stencil(ap, engine="reference", **kw)
-        assert rv.rank_tts_s == rr.rank_tts_s
-        _assert_same(rv, rr)
+        assert_engines_agree(
+            "stencil", ap, forced=True, dims=dims, theta=theta,
+            n_threads=2, n_vcis=2, local_shape=(24, 8, 4)[:len(dims)],
+            ready=ready(2, theta, seed))
 
 
 class TestImbalanceDiff:
@@ -141,13 +109,10 @@ class TestImbalanceDiff:
            theta=st.sampled_from([2, 4]), seed=st.integers(0, 4))
     @settings(max_examples=25, deadline=None)
     def test_bit_for_bit(self, ap, ranks, wl, theta, seed):
-        kw = dict(n_ranks=ranks, workload=pm.WORKLOADS[wl], theta=theta,
-                  part_bytes=1 << 18, n_threads=2, n_vcis=2, seed=seed)
-        rv = sim.simulate_imbalance(ap, engine="vector", **kw)
-        rr = sim.simulate_imbalance(ap, engine="reference", **kw)
-        assert rv.rank_tts_s == rr.rank_tts_s
-        assert rv.mean_delay_s == rr.mean_delay_s
-        _assert_same(rv, rr)
+        assert_engines_agree(
+            "imbalance", ap, n_ranks=ranks, workload=pm.WORKLOADS[wl],
+            theta=theta, part_bytes=1 << 18, n_threads=2, n_vcis=2,
+            seed=seed)
 
 
 class TestReadyShapeValidation:

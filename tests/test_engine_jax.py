@@ -12,10 +12,12 @@ five drivers and every approach, under both precision modes:
   only tolerance-gated (~1e-4 relative on arrival times); structural
   counters (``n_messages``, ``sent_per_rank``) stay exact.
 
-The whole-grid vmapped path (``simulate_stencil_grid`` /
-``run_records_batched``) is differentially tested against the per-point
-engines, and the 4096-rank ``weak_scaling_xl`` smoke tier must complete
-within its wall-time budget while reproducing the committed baseline.
+Driver invocation and comparison fields come from the shared table in
+``tests/_engines.py``; the whole-grid vmapped path
+(``simulate_stencil_grid`` / ``run_records_batched``) is differentially
+tested against the per-point engines, and the 4096-rank
+``weak_scaling_xl`` smoke tier must complete within its wall-time
+budget while reproducing the committed baseline.
 """
 
 import json
@@ -27,8 +29,10 @@ import pytest
 
 jax = pytest.importorskip("jax")
 
+from _engines import (APPROACHES, F32_RTOL, PIPELINED,  # noqa: E402
+                      assert_engines_agree, assert_results_close,
+                      forced_scans as forced, ready)
 from repro import compat  # noqa: E402
-from repro.core import fabric as fb  # noqa: E402
 from repro.core import perfmodel as pm  # noqa: E402
 from repro.core import simulator as sim  # noqa: E402
 
@@ -37,93 +41,50 @@ try:
 except ImportError:  # env without hypothesis: deterministic fallback
     from _hypo import given, settings, st
 
-APPROACHES = sorted(sim.APPROACHES)
-PIPELINED = ("part", "part_old", "pt2pt_single", "pt2pt_many")
-
-# Relative tolerance of the float32 mode: single-precision rounding over
-# a few thousand serial queue updates stays well inside 1e-4 relative.
-F32_RTOL = 1e-4
-
-
-def _ready(n_threads, theta, seed):
-    rng = np.random.default_rng(seed)
-    return rng.uniform(0.0, 25e-6, size=(n_threads, theta))
-
-
-@pytest.fixture
-def forced_scans(monkeypatch):
-    """Route every batch through the staged scans, however narrow."""
-    monkeypatch.setattr(fb, "SCALAR_BATCH_CUTOFF", 0)
-    monkeypatch.setattr(fb, "MIN_GROUP_PARALLELISM", 0)
-
-
-def _assert_exact(rj, rv):
-    assert rj.n_messages == rv.n_messages
-    assert rj.time_s == rv.time_s  # bit-for-bit, no tolerance
-    assert rj.tts_s == rv.tts_s
-
-
-def _assert_close(rj, rv):
-    assert rj.n_messages == rv.n_messages
-    assert rj.tts_s == pytest.approx(rv.tts_s, rel=F32_RTOL)
-    # time_s subtracts compute from tts, so its tolerance is anchored to
-    # the tts magnitude, not its own (possibly tiny) value
-    assert abs(rj.time_s - rv.time_s) <= F32_RTOL * abs(rv.tts_s)
+JV = ("jax", "vector")
 
 
 class TestX64BitForBit:
     """Under x64 the compiled scans equal the NumPy engines exactly."""
 
     @pytest.mark.parametrize("ap", APPROACHES)
-    def test_stencil_all_approaches(self, ap, forced_scans):
+    def test_stencil_all_approaches(self, ap):
         with compat.x64_mode(True):
             for dims, n, theta, vcis, seed in (
                     ((2, 2), 1, 2, 1, 0), ((2, 2, 2), 2, 4, 2, 1)):
-                kw = dict(dims=dims, theta=theta, n_threads=n, n_vcis=vcis,
-                          local_shape=(24, 8, 4)[:len(dims)],
-                          ready=_ready(n, theta, seed))
-                rj = sim.simulate_stencil(ap, engine="jax", **kw)
-                rv = sim.simulate_stencil(ap, engine="vector", **kw)
-                assert rj.rank_tts_s == rv.rank_tts_s
-                assert rj.sent_per_rank == rv.sent_per_rank
-                _assert_exact(rj, rv)
+                assert_engines_agree(
+                    "stencil", ap, engines=JV, forced=True, dims=dims,
+                    theta=theta, n_threads=n, n_vcis=vcis,
+                    local_shape=(24, 8, 4)[:len(dims)],
+                    ready=ready(n, theta, seed))
 
     @pytest.mark.parametrize("ap", APPROACHES)
-    def test_halo_all_approaches(self, ap, forced_scans):
+    def test_halo_all_approaches(self, ap):
         with compat.x64_mode(True):
-            kw = dict(n_ranks=4, theta=4, part_bytes=4096, n_threads=2,
-                      n_vcis=2, ready=_ready(2, 4, 3))
-            rj = sim.simulate_halo(ap, engine="jax", **kw)
-            rv = sim.simulate_halo(ap, engine="vector", **kw)
-            assert rj.rank_tts_s == rv.rank_tts_s
-            _assert_exact(rj, rv)
+            assert_engines_agree(
+                "halo", ap, engines=JV, forced=True, n_ranks=4, theta=4,
+                part_bytes=4096, n_threads=2, n_vcis=2,
+                ready=ready(2, 4, 3))
 
     @pytest.mark.parametrize("ap", APPROACHES)
-    def test_oneshot_and_steady(self, ap, forced_scans):
+    def test_oneshot_and_steady(self, ap):
         """Single-flow drivers (scalar path on every engine) still
         thread engine='jax' end to end."""
         with compat.x64_mode(True):
             kw = dict(n_threads=2, theta=4, part_bytes=2048, n_vcis=2,
-                      ready=_ready(2, 4, 5))
-            _assert_exact(sim.simulate(ap, engine="jax", **kw),
-                          sim.simulate(ap, engine="vector", **kw))
-            rj = sim.simulate_steady_state(ap, n_iters=3, **kw,
-                                           engine="jax")
-            rv = sim.simulate_steady_state(ap, n_iters=3, **kw,
-                                           engine="vector")
-            assert rj.iter_times_s == rv.iter_times_s
-            assert rj.tts_s == rv.tts_s and rj.n_messages == rv.n_messages
+                      ready=ready(2, 4, 5))
+            assert_engines_agree("oneshot", ap, engines=JV, forced=True,
+                                 **kw)
+            assert_engines_agree("steady", ap, engines=JV, forced=True,
+                                 n_iters=3, **kw)
 
     @pytest.mark.parametrize("ap", PIPELINED[:2])
-    def test_imbalance(self, ap, forced_scans):
+    def test_imbalance(self, ap):
         with compat.x64_mode(True):
-            kw = dict(n_ranks=4, workload=pm.WORKLOADS["stencil"], theta=2,
-                      part_bytes=1 << 18, n_threads=2, n_vcis=2, seed=7)
-            rj = sim.simulate_imbalance(ap, engine="jax", **kw)
-            rv = sim.simulate_imbalance(ap, engine="vector", **kw)
-            assert rj.rank_tts_s == rv.rank_tts_s
-            assert rj.mean_delay_s == rv.mean_delay_s
-            _assert_exact(rj, rv)
+            assert_engines_agree(
+                "imbalance", ap, engines=JV, forced=True, n_ranks=4,
+                workload=pm.WORKLOADS["stencil"], theta=2,
+                part_bytes=1 << 18, n_threads=2, n_vcis=2, seed=7)
 
     @given(ap=st.sampled_from(PIPELINED),
            dims=st.sampled_from([(3, 2), (2, 2, 2)]),
@@ -131,46 +92,36 @@ class TestX64BitForBit:
     @settings(max_examples=10, deadline=None)
     def test_stencil_randomized(self, ap, dims, theta, seed):
         """Randomized scenarios through the staged scans (forced on)."""
-        kw = dict(dims=dims, theta=theta, n_threads=2, n_vcis=2,
-                  local_shape=(24, 8, 4)[:len(dims)],
-                  ready=_ready(2, theta, seed))
-        cutoff, par = fb.SCALAR_BATCH_CUTOFF, fb.MIN_GROUP_PARALLELISM
-        fb.SCALAR_BATCH_CUTOFF = fb.MIN_GROUP_PARALLELISM = 0
-        try:
-            with compat.x64_mode(True):
-                rj = sim.simulate_stencil(ap, engine="jax", **kw)
-        finally:
-            fb.SCALAR_BATCH_CUTOFF, fb.MIN_GROUP_PARALLELISM = cutoff, par
-        rv = sim.simulate_stencil(ap, engine="vector", **kw)
-        assert rj.rank_tts_s == rv.rank_tts_s
-        _assert_exact(rj, rv)
+        with compat.x64_mode(True):
+            assert_engines_agree(
+                "stencil", ap, engines=JV, forced=True, dims=dims,
+                theta=theta, n_threads=2, n_vcis=2,
+                local_shape=(24, 8, 4)[:len(dims)],
+                ready=ready(2, theta, seed))
 
     def test_wide_batch_takes_scans_unforced(self):
         """A 512-rank torus engages the jitted scans through the normal
         adaptive routing (no forcing) and still matches exactly."""
         with compat.x64_mode(True):
-            kw = dict(dims=(8, 8, 8), theta=4, n_threads=2, n_vcis=2,
-                      local_shape=(64, 64, 64))
-            rj = sim.simulate_stencil("part", engine="jax", **kw)
-            rv = sim.simulate_stencil("part", engine="vector", **kw)
-            assert rj.rank_tts_s == rv.rank_tts_s
-            _assert_exact(rj, rv)
+            assert_engines_agree(
+                "stencil", "part", engines=JV, dims=(8, 8, 8), theta=4,
+                n_threads=2, n_vcis=2, local_shape=(64, 64, 64))
 
 
 class TestFloat32Tolerance:
     """Without x64 the engine is tolerance-gated, counters stay exact."""
 
     @pytest.mark.parametrize("ap", PIPELINED)
-    def test_stencil(self, ap, forced_scans):
-        with compat.x64_mode(False):
-            kw = dict(dims=(2, 2, 2), theta=4, n_threads=2, n_vcis=2,
-                      local_shape=(24, 8, 4), ready=_ready(2, 4, 11))
+    def test_stencil(self, ap):
+        kw = dict(dims=(2, 2, 2), theta=4, n_threads=2, n_vcis=2,
+                  local_shape=(24, 8, 4), ready=ready(2, 4, 11))
+        with compat.x64_mode(False), forced():
             rj = sim.simulate_stencil(ap, engine="jax", **kw)
         rv = sim.simulate_stencil(ap, engine="vector", **kw)
         assert rj.sent_per_rank == rv.sent_per_rank
         np.testing.assert_allclose(rj.rank_tts_s, rv.rank_tts_s,
                                    rtol=F32_RTOL)
-        _assert_close(rj, rv)
+        assert_results_close(rj, rv)
 
     def test_x64_guard_reports_mode(self):
         with compat.x64_mode(True):
@@ -196,7 +147,8 @@ class TestGridPath:
                 assert r.rank_tts_s == rv.rank_tts_s
                 assert r.sent_per_rank == rv.sent_per_rank
                 assert r.face_bytes == rv.face_bytes
-                _assert_exact(r, rv)
+                assert r.n_messages == rv.n_messages
+                assert r.time_s == rv.time_s and r.tts_s == rv.tts_s
 
     def test_dependent_traffic_falls_back_to_none(self):
         with compat.x64_mode(True):

@@ -14,15 +14,16 @@ against the vectorized engine — and therefore the scalar
 * float32: tolerance-gated (~1e-4 relative); structural counters stay
   exact.
 
-On CPU CI the kernel runs in interpret mode (the shared
-``REPRO_PALLAS_INTERPRET`` resolver in :mod:`repro.kernels.runtime`),
-which executes the same program through XLA — the differential
-guarantees carry to compiled TPU runs because the operand protocol and
-program are identical.  The ``REPRO_PALLAS_GRID=bucket`` layout (one
-program instance per scan bucket) is diffed against the default fused
-layout.  The 32768-rank ``weak_scaling_xxl`` smoke tier must finish
-within budget and reproduce the committed baseline; the full XXL grid
-is ``slow``-marked.
+Driver invocation and comparison fields come from the shared table in
+``tests/_engines.py``.  On CPU CI the kernel runs in interpret mode
+(the shared ``REPRO_PALLAS_INTERPRET`` resolver in
+:mod:`repro.kernels.runtime`), which executes the same program through
+XLA — the differential guarantees carry to compiled TPU runs because
+the operand protocol and program are identical.  The
+``REPRO_PALLAS_GRID=bucket`` layout (one program instance per scan
+bucket) is diffed against the default fused layout.  The 32768-rank
+``weak_scaling_xxl`` smoke tier must finish within budget and
+reproduce the committed baseline; the full XXL grid is ``slow``-marked.
 """
 
 import json
@@ -34,8 +35,10 @@ import pytest
 
 jax = pytest.importorskip("jax")
 
+from _engines import (APPROACHES, F32_RTOL, PIPELINED,  # noqa: E402
+                      assert_engines_agree, assert_results_close,
+                      forced_scans as forced, ready)
 from repro import compat  # noqa: E402
-from repro.core import fabric as fb  # noqa: E402
 from repro.core import fabric_jax as fj  # noqa: E402
 from repro.core import fabric_pallas as fp  # noqa: E402
 from repro.core import perfmodel as pm  # noqa: E402
@@ -47,34 +50,7 @@ try:
 except ImportError:  # env without hypothesis: deterministic fallback
     from _hypo import given, settings, st
 
-APPROACHES = sorted(sim.APPROACHES)
-PIPELINED = ("part", "part_old", "pt2pt_single", "pt2pt_many")
-
-F32_RTOL = 1e-4
-
-
-def _ready(n_threads, theta, seed):
-    rng = np.random.default_rng(seed)
-    return rng.uniform(0.0, 25e-6, size=(n_threads, theta))
-
-
-@pytest.fixture
-def forced_scans(monkeypatch):
-    """Route every batch through the fused kernel, however narrow."""
-    monkeypatch.setattr(fb, "SCALAR_BATCH_CUTOFF", 0)
-    monkeypatch.setattr(fb, "MIN_GROUP_PARALLELISM", 0)
-
-
-def _assert_exact(rp, rv):
-    assert rp.n_messages == rv.n_messages
-    assert rp.time_s == rv.time_s  # bit-for-bit, no tolerance
-    assert rp.tts_s == rv.tts_s
-
-
-def _assert_close(rp, rv):
-    assert rp.n_messages == rv.n_messages
-    assert rp.tts_s == pytest.approx(rv.tts_s, rel=F32_RTOL)
-    assert abs(rp.time_s - rv.time_s) <= F32_RTOL * abs(rv.tts_s)
+PV = ("pallas", "vector")
 
 
 def _grid_items(points):
@@ -100,55 +76,43 @@ class TestX64BitForBit:
     """Under x64 the fused kernel equals the NumPy engines exactly."""
 
     @pytest.mark.parametrize("ap", APPROACHES)
-    def test_stencil_all_approaches(self, ap, forced_scans):
+    def test_stencil_all_approaches(self, ap):
         with compat.x64_mode(True):
             for dims, n, theta, vcis, seed in (
                     ((2, 2), 1, 2, 1, 0), ((2, 2, 2), 2, 4, 2, 1)):
-                kw = dict(dims=dims, theta=theta, n_threads=n, n_vcis=vcis,
-                          local_shape=(24, 8, 4)[:len(dims)],
-                          ready=_ready(n, theta, seed))
-                rp = sim.simulate_stencil(ap, engine="pallas", **kw)
-                rv = sim.simulate_stencil(ap, engine="vector", **kw)
-                assert rp.rank_tts_s == rv.rank_tts_s
-                assert rp.sent_per_rank == rv.sent_per_rank
-                _assert_exact(rp, rv)
+                assert_engines_agree(
+                    "stencil", ap, engines=PV, forced=True, dims=dims,
+                    theta=theta, n_threads=n, n_vcis=vcis,
+                    local_shape=(24, 8, 4)[:len(dims)],
+                    ready=ready(n, theta, seed))
 
     @pytest.mark.parametrize("ap", APPROACHES)
-    def test_halo_all_approaches(self, ap, forced_scans):
+    def test_halo_all_approaches(self, ap):
         with compat.x64_mode(True):
-            kw = dict(n_ranks=4, theta=4, part_bytes=4096, n_threads=2,
-                      n_vcis=2, ready=_ready(2, 4, 3))
-            rp = sim.simulate_halo(ap, engine="pallas", **kw)
-            rv = sim.simulate_halo(ap, engine="vector", **kw)
-            assert rp.rank_tts_s == rv.rank_tts_s
-            _assert_exact(rp, rv)
+            assert_engines_agree(
+                "halo", ap, engines=PV, forced=True, n_ranks=4, theta=4,
+                part_bytes=4096, n_threads=2, n_vcis=2,
+                ready=ready(2, 4, 3))
 
     @pytest.mark.parametrize("ap", APPROACHES)
-    def test_oneshot_and_steady(self, ap, forced_scans):
+    def test_oneshot_and_steady(self, ap):
         """Warm-state drivers: the steady-state loop re-enters the
         kernel with carried VCI/NIC/wire busy-until vectors."""
         with compat.x64_mode(True):
             kw = dict(n_threads=2, theta=4, part_bytes=2048, n_vcis=2,
-                      ready=_ready(2, 4, 5))
-            _assert_exact(sim.simulate(ap, engine="pallas", **kw),
-                          sim.simulate(ap, engine="vector", **kw))
-            rp = sim.simulate_steady_state(ap, n_iters=3, **kw,
-                                           engine="pallas")
-            rv = sim.simulate_steady_state(ap, n_iters=3, **kw,
-                                           engine="vector")
-            assert rp.iter_times_s == rv.iter_times_s
-            assert rp.tts_s == rv.tts_s and rp.n_messages == rv.n_messages
+                      ready=ready(2, 4, 5))
+            assert_engines_agree("oneshot", ap, engines=PV, forced=True,
+                                 **kw)
+            assert_engines_agree("steady", ap, engines=PV, forced=True,
+                                 n_iters=3, **kw)
 
     @pytest.mark.parametrize("ap", PIPELINED[:2])
-    def test_imbalance(self, ap, forced_scans):
+    def test_imbalance(self, ap):
         with compat.x64_mode(True):
-            kw = dict(n_ranks=4, workload=pm.WORKLOADS["stencil"], theta=2,
-                      part_bytes=1 << 18, n_threads=2, n_vcis=2, seed=7)
-            rp = sim.simulate_imbalance(ap, engine="pallas", **kw)
-            rv = sim.simulate_imbalance(ap, engine="vector", **kw)
-            assert rp.rank_tts_s == rv.rank_tts_s
-            assert rp.mean_delay_s == rv.mean_delay_s
-            _assert_exact(rp, rv)
+            assert_engines_agree(
+                "imbalance", ap, engines=PV, forced=True, n_ranks=4,
+                workload=pm.WORKLOADS["stencil"], theta=2,
+                part_bytes=1 << 18, n_threads=2, n_vcis=2, seed=7)
 
     @given(ap=st.sampled_from(PIPELINED),
            dims=st.sampled_from([(3, 2), (2, 2, 2)]),
@@ -156,30 +120,20 @@ class TestX64BitForBit:
     @settings(max_examples=10, deadline=None)
     def test_stencil_randomized(self, ap, dims, theta, seed):
         """Randomized scenarios through the fused kernel (forced on)."""
-        kw = dict(dims=dims, theta=theta, n_threads=2, n_vcis=2,
-                  local_shape=(24, 8, 4)[:len(dims)],
-                  ready=_ready(2, theta, seed))
-        cutoff, par = fb.SCALAR_BATCH_CUTOFF, fb.MIN_GROUP_PARALLELISM
-        fb.SCALAR_BATCH_CUTOFF = fb.MIN_GROUP_PARALLELISM = 0
-        try:
-            with compat.x64_mode(True):
-                rp = sim.simulate_stencil(ap, engine="pallas", **kw)
-        finally:
-            fb.SCALAR_BATCH_CUTOFF, fb.MIN_GROUP_PARALLELISM = cutoff, par
-        rv = sim.simulate_stencil(ap, engine="vector", **kw)
-        assert rp.rank_tts_s == rv.rank_tts_s
-        _assert_exact(rp, rv)
+        with compat.x64_mode(True):
+            assert_engines_agree(
+                "stencil", ap, engines=PV, forced=True, dims=dims,
+                theta=theta, n_threads=2, n_vcis=2,
+                local_shape=(24, 8, 4)[:len(dims)],
+                ready=ready(2, theta, seed))
 
     def test_wide_batch_takes_kernel_unforced(self):
         """A 512-rank torus engages the fused kernel through the normal
         adaptive routing (no forcing) and still matches exactly."""
         with compat.x64_mode(True):
-            kw = dict(dims=(8, 8, 8), theta=4, n_threads=2, n_vcis=2,
-                      local_shape=(64, 64, 64))
-            rp = sim.simulate_stencil("part", engine="pallas", **kw)
-            rv = sim.simulate_stencil("part", engine="vector", **kw)
-            assert rp.rank_tts_s == rv.rank_tts_s
-            _assert_exact(rp, rv)
+            assert_engines_agree(
+                "stencil", "part", engines=PV, dims=(8, 8, 8), theta=4,
+                n_threads=2, n_vcis=2, local_shape=(64, 64, 64))
 
     def test_narrow_batch_takes_scalar_fallback(self, monkeypatch):
         """Below the adaptive cutoffs PallasFabric must not launch a
@@ -189,27 +143,25 @@ class TestX64BitForBit:
             raise AssertionError("kernel launched for a narrow batch")
         monkeypatch.setattr(fp, "_build_call", _boom)
         with compat.x64_mode(True):
-            kw = dict(n_threads=1, theta=2, part_bytes=64, n_vcis=1,
-                      ready=_ready(1, 2, 9))
-            rp = sim.simulate("part", engine="pallas", **kw)
-            rv = sim.simulate("part", engine="vector", **kw)
-            _assert_exact(rp, rv)
+            assert_engines_agree(
+                "oneshot", "part", engines=PV, n_threads=1, theta=2,
+                part_bytes=64, n_vcis=1, ready=ready(1, 2, 9))
 
 
 class TestFloat32Tolerance:
     """Without x64 the engine is tolerance-gated, counters stay exact."""
 
     @pytest.mark.parametrize("ap", PIPELINED)
-    def test_stencil(self, ap, forced_scans):
-        with compat.x64_mode(False):
-            kw = dict(dims=(2, 2, 2), theta=4, n_threads=2, n_vcis=2,
-                      local_shape=(24, 8, 4), ready=_ready(2, 4, 11))
+    def test_stencil(self, ap):
+        kw = dict(dims=(2, 2, 2), theta=4, n_threads=2, n_vcis=2,
+                  local_shape=(24, 8, 4), ready=ready(2, 4, 11))
+        with compat.x64_mode(False), forced():
             rp = sim.simulate_stencil(ap, engine="pallas", **kw)
         rv = sim.simulate_stencil(ap, engine="vector", **kw)
         assert rp.sent_per_rank == rv.sent_per_rank
         np.testing.assert_allclose(rp.rank_tts_s, rv.rank_tts_s,
                                    rtol=F32_RTOL)
-        _assert_close(rp, rv)
+        assert_results_close(rp, rv)
 
 
 class TestGridPath:
@@ -230,7 +182,8 @@ class TestGridPath:
                 assert r.rank_tts_s == rv.rank_tts_s
                 assert r.sent_per_rank == rv.sent_per_rank
                 assert r.face_bytes == rv.face_bytes
-                _assert_exact(r, rv)
+                assert r.n_messages == rv.n_messages
+                assert r.time_s == rv.time_s and r.tts_s == rv.tts_s
 
     def test_grid_matches_jax_engine_bitwise(self):
         """Same grid through both compiled engines: identical records,
@@ -240,7 +193,8 @@ class TestGridPath:
             rj = sim.simulate_stencil_grid(self.POINTS, engine="jax")
             for a, b in zip(rp, rj):
                 assert a.rank_tts_s == b.rank_tts_s
-                _assert_exact(a, b)
+                assert a.n_messages == b.n_messages
+                assert a.time_s == b.time_s and a.tts_s == b.tts_s
 
     def test_dependent_traffic_falls_back_to_none(self):
         with compat.x64_mode(True):
@@ -313,14 +267,15 @@ class TestInterpretResolver:
         diffs the compiled kernel against interpret)."""
         with compat.x64_mode(True):
             kw = dict(dims=(2, 2, 2), theta=4, n_threads=2, n_vcis=2,
-                      local_shape=(24, 8, 4), ready=_ready(2, 4, 13))
+                      local_shape=(24, 8, 4), ready=ready(2, 4, 13))
             with rt.force_interpret(True):
                 fp.clear_memos()
                 ri = sim.simulate_stencil("part", engine="pallas", **kw)
             fp.clear_memos()
             rv = sim.simulate_stencil("part", engine="vector", **kw)
             assert ri.rank_tts_s == rv.rank_tts_s
-            _assert_exact(ri, rv)
+            assert ri.n_messages == rv.n_messages
+            assert ri.time_s == rv.time_s and ri.tts_s == rv.tts_s
 
 
 class TestWeakScalingXXL:

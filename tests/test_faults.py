@@ -27,6 +27,7 @@ try:
 except ImportError:  # env without hypothesis: deterministic fallback
     from _hypo import given, settings, st
 
+from _engines import assert_engines_agree
 from repro.core import commplan, fabric as fb, planner as pl
 from repro.core import simulator as sim
 from repro.core.faults import (DropDraws, FaultSpec, LinkDegrade,
@@ -174,31 +175,14 @@ class TestDrops:
            seed=st.integers(0, 3))
     @settings(max_examples=12, deadline=None)
     def test_vector_equals_reference_bit_for_bit(self, approach, rate, seed):
-        spec = FaultSpec(drop_prob=rate, seed=seed)
-        rv = sim.simulate_faulty(approach, faults=spec, engine="vector",
-                                 **STENCIL_KW)
-        rr = sim.simulate_faulty(approach, faults=spec, engine="reference",
-                                 **STENCIL_KW)
-        assert rv.tts_s == rr.tts_s
-        assert rv.rank_tts_s == rr.rank_tts_s
-        assert rv.n_retransmits == rr.n_retransmits
-        assert rv.retrans_bytes == rr.retrans_bytes
-        assert rv.rounds == rr.rounds
-        assert rv.n_messages == rr.n_messages
+        assert_engines_agree(
+            "faulty", approach, faults=FaultSpec(drop_prob=rate, seed=seed),
+            **STENCIL_KW)
 
     def test_forced_staged_scans_stay_bit_for_bit(self):
-        spec = FaultSpec(drop_prob=0.05, seed=2)
-        rr = sim.simulate_faulty("part", faults=spec, engine="reference",
-                                 **STENCIL_KW)
-        cutoff, par = fb.SCALAR_BATCH_CUTOFF, fb.MIN_GROUP_PARALLELISM
-        fb.SCALAR_BATCH_CUTOFF = fb.MIN_GROUP_PARALLELISM = 0
-        try:
-            rv = sim.simulate_faulty("part", faults=spec, engine="vector",
-                                     **STENCIL_KW)
-        finally:
-            fb.SCALAR_BATCH_CUTOFF, fb.MIN_GROUP_PARALLELISM = cutoff, par
-        assert rv.tts_s == rr.tts_s
-        assert rv.rank_tts_s == rr.rank_tts_s
+        assert_engines_agree(
+            "faulty", "part", forced=True,
+            faults=FaultSpec(drop_prob=0.05, seed=2), **STENCIL_KW)
 
     @pytest.mark.parametrize("engine", ("jax", "pallas"))
     def test_compiled_engines_fall_back_to_vector(self, engine):

@@ -22,11 +22,11 @@ try:
 except ImportError:  # env without hypothesis: deterministic fallback
     from _hypo import given, settings, st
 
+from _engines import (APPROACHES, assert_engines_agree,
+                      forced_scans as forced)
 from repro.core import arrivals as arr
 from repro.core import fabric as fb
 from repro.core import simulator as sim
-
-APPROACHES = sorted(sim.APPROACHES)
 
 SERVE_KW = dict(n_requests=48, n_stages=4, theta=8, part_bytes=131072.0,
                 n_vcis=4, compute_us=40.0, window_us=5.0, seed=3)
@@ -94,6 +94,48 @@ class TestArrivals:
         for kind in arr.ARRIVALS:
             assert kind in msg, f"{kind!r} missing from: {msg}"
 
+    @pytest.mark.parametrize("skew", [3.0, 5.0, 10.0])
+    @pytest.mark.parametrize("n_requests,n_tenants",
+                             [(257, 4), (33, 8), (512, 16)])
+    def test_adversarial_skew_counts_sum_exactly(self, skew, n_requests,
+                                                 n_tenants):
+        """Largest-remainder apportionment under heavy Zipf skew: the
+        floor puts nearly everything on tenant 0 and clamps the tail
+        tenants to 1, which overshoots ``n_requests`` — the repair loops
+        must land the total exactly, never starve a tenant, and keep the
+        heaviest tenant heaviest."""
+        t = arr.multi_tenant_trace("poisson", 1e4, n_requests,
+                                   n_tenants=n_tenants, skew=skew, seed=5)
+        assert len(t) == n_requests
+        counts = np.bincount(t.tenant, minlength=n_tenants)
+        assert counts.sum() == n_requests
+        assert counts.min() >= 1
+        assert counts[0] == counts.max()
+        assert np.all(np.diff(t.t) >= 0.0)
+
+    def test_one_request_per_tenant_under_extreme_skew(self):
+        """The n_requests == n_tenants corner: skew wants to give tenant
+        0 everything, the one-per-tenant floor wants everyone served —
+        apportionment must settle on exactly one each."""
+        t = arr.multi_tenant_trace("poisson", 1e4, 4, n_tenants=4,
+                                   skew=10.0, seed=1)
+        counts = np.bincount(t.tenant, minlength=4)
+        assert counts.tolist() == [1, 1, 1, 1]
+
+    @pytest.mark.parametrize("burst_mean,intra_frac",
+                             [(8.0, 0.5), (16.0, 1.0), (32.0, 2.0)])
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_bursty_monotonic_at_epoch_boundaries(self, burst_mean,
+                                                  intra_frac, seed):
+        """Long bursts with wide intra-burst gaps straddle the next
+        burst epoch; the emitted trace must still be sorted (the
+        unsorted-tail regression fixed by sorting the merged point
+        process before truncation)."""
+        t = arr.bursty_trace(1e4, 256, burst_mean=burst_mean,
+                             intra_gap_frac=intra_frac, seed=seed)
+        assert len(t) == 256
+        assert np.all(np.diff(t.t) >= 0.0)
+
 
 def _random_wave_columns(n, n_ranks, n_vcis, seed):
     """Random message columns in non-decreasing t_ready order."""
@@ -122,14 +164,10 @@ class TestAdvanceStreaming:
         fv = fb.Fabric(fb.DEFAULT_NET, 2, n_ranks=4)
         fr = fb.ReferenceFabric(fb.DEFAULT_NET, 2, n_ranks=4)
         cuts = np.linspace(0, n, n_waves + 1).astype(int)
-        cutoff, par = fb.SCALAR_BATCH_CUTOFF, fb.MIN_GROUP_PARALLELISM
-        fb.SCALAR_BATCH_CUTOFF = fb.MIN_GROUP_PARALLELISM = 0
-        try:  # staged scans forced on: the batched path itself is diffed
+        with forced():  # staged scans on: the batched path itself is diffed
             av = np.concatenate([
                 fv.advance(**{k: v[a:b] for k, v in cols.items()})
                 for a, b in zip(cuts[:-1], cuts[1:])])
-        finally:
-            fb.SCALAR_BATCH_CUTOFF, fb.MIN_GROUP_PARALLELISM = cutoff, par
         ar = fr.advance(**cols)
         assert np.array_equal(av, ar)  # bit-for-bit, no tolerance
         assert fv.n_messages == fr.n_messages == n
@@ -146,14 +184,10 @@ class TestAdvanceStreaming:
         assert f.n_messages == 0
 
 
-def _assert_serving_same(rv, rr):
-    assert np.array_equal(rv.latency_s, rr.latency_s)  # bit-for-bit
-    assert rv.tts_s == rr.tts_s
-    assert rv.n_messages == rr.n_messages
-    assert rv.n_waves == rr.n_waves
-
-
 class TestServingDiff:
+    """Wave-admission driver diffed via the shared harness (the
+    ``serving`` row of ``_engines.DRIVERS`` pins the compared fields)."""
+
     @given(ap=st.sampled_from(APPROACHES),
            arrival=st.sampled_from(["poisson", "bursty"]),
            rate=st.sampled_from([2e3, 10e3, 25e3]),
@@ -162,11 +196,10 @@ class TestServingDiff:
            seed=st.integers(0, 3))
     @settings(max_examples=40, deadline=None)
     def test_bit_for_bit(self, ap, arrival, rate, tenants, stages, seed):
-        kw = dict(SERVE_KW, arrival=arrival, rate_rps=rate,
-                  n_tenants=tenants, n_stages=stages, seed=seed)
-        rv = sim.simulate_serving(ap, engine="vector", **kw)
-        rr = sim.simulate_serving(ap, engine="reference", **kw)
-        _assert_serving_same(rv, rr)
+        assert_engines_agree(
+            "serving", ap, **dict(SERVE_KW, arrival=arrival, rate_rps=rate,
+                                  n_tenants=tenants, n_stages=stages,
+                                  seed=seed))
 
     @given(ap=st.sampled_from(["part", "pt2pt_many", "pt2pt_single"]),
            rate=st.sampled_from([10e3, 25e3]), seed=st.integers(0, 3))
@@ -175,15 +208,9 @@ class TestServingDiff:
         """Waves through the grouped scans (heuristic off), so the
         batched streaming path itself is differentially tested — not
         just the scalar fallback narrow waves would pick."""
-        kw = dict(SERVE_KW, rate_rps=rate, n_tenants=4, seed=seed)
-        cutoff, par = fb.SCALAR_BATCH_CUTOFF, fb.MIN_GROUP_PARALLELISM
-        fb.SCALAR_BATCH_CUTOFF = fb.MIN_GROUP_PARALLELISM = 0
-        try:
-            rv = sim.simulate_serving(ap, engine="vector", **kw)
-        finally:
-            fb.SCALAR_BATCH_CUTOFF, fb.MIN_GROUP_PARALLELISM = cutoff, par
-        rr = sim.simulate_serving(ap, engine="reference", **kw)
-        _assert_serving_same(rv, rr)
+        assert_engines_agree(
+            "serving", ap, forced=True,
+            **dict(SERVE_KW, rate_rps=rate, n_tenants=4, seed=seed))
 
 
 class TestServingMetrics:

@@ -1,0 +1,58 @@
+"""Chaos-campaign CLI: randomized fault sweeps with hard invariants.
+
+Thin wrapper over :mod:`repro.experiments.chaos`.  Samples ``n``
+seeded campaigns (randomized FaultSpecs x recovery policies x
+stencil/serving scenarios), runs each on the vector and reference
+engines, and checks the invariant set (engine agreement, message and
+hedge conservation, monotone clocks, bounded retransmission rounds,
+determinism re-runs).  Exits non-zero if any campaign violates an
+invariant — CI runs ``--campaigns 64`` and uploads the report.
+
+    PYTHONPATH=src python -m benchmarks.chaos --campaigns 64 \
+        --seed 0 --out chaos_smoke.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.experiments.chaos import run_campaigns
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--campaigns", type=int, default=64,
+                    help="number of seeded campaigns (default 64)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="campaign seed root (default 0)")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON report here")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print one line per campaign")
+    args = ap.parse_args(argv)
+
+    def progress(idx, info):
+        if args.verbose:
+            status = "FAIL" if info["violations"] else "ok"
+            print(f"  campaign {idx:3d} [{status}] {info['kind']}"
+                  f"/{info['policy']} retx={info['n_retransmits']}")
+
+    report = run_campaigns(args.campaigns, seed=args.seed,
+                           progress=progress)
+    print(f"chaos: {report['n_campaigns']} campaigns "
+          f"(seed {report['seed']}, {report['n_serving']} serving), "
+          f"policies {report['by_policy']}, "
+          f"{report['n_violations']} violations")
+    for v in report["violations"]:
+        print(f"  VIOLATION: {v}")
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(report, fh, indent=2, sort_keys=True)
+        print(f"wrote {args.out}")
+    return 1 if report["n_violations"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -87,7 +87,7 @@ BENCH_SPEC_ENGINES = {"weak_scaling_xxl": ("jax", "pallas")}
 # serving pairs) are orchestration-bound the same way, and the IR
 # runner's time goes to pass-pipeline guard simulations, not one scan.
 BENCH_EXCLUDED_RUNNERS = ("autotune", "serving", "faulty", "membership",
-                          "servingfaults", "ir")
+                          "servingfaults", "ir", "recovery")
 # Grids below this many simulated wire messages finish in a handful of
 # milliseconds, where the vector/reference ratio is timer noise (and the
 # adaptive routing sends them down the scalar path anyway, pinning the

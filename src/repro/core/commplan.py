@@ -206,7 +206,7 @@ def plan_sized(sizes: Sequence[float], *, aggr_bytes: float = 0.0,
 def plan_auto(total_bytes: float = None, *, sizes: Sequence[float] = None,
               n_threads: int = 1, workload=None, cfg=None,
               max_parts: int = 512, max_vcis: int = 32, faults=None,
-              pipeline=None):
+              policy=None, pipeline=None):
     """Model-chosen plan: the :mod:`repro.core.planner` autotuner picks
     the partition count, aggregation bound and channel count from the
     closed-form performance model, then the matching planner builds the
@@ -227,7 +227,9 @@ def plan_auto(total_bytes: float = None, *, sizes: Sequence[float] = None,
     calibration).  ``faults`` (a :class:`~repro.core.faults.FaultSpec`)
     makes the model charge each candidate its expected retransmission
     cost, shifting the pick away from heavily aggregated plans when the
-    fabric drops partitions.  Returns ``(plan, choice)`` — the immutable
+    fabric drops partitions; ``policy`` (a :class:`~repro.core.recovery
+    .RecoveryPolicy`) prices that term under the matching recovery
+    clock instead of the fixed timeout.  Returns ``(plan, choice)`` — the immutable
     :class:`CommPlan` plus the :class:`~repro.core.planner.PlanChoice`
     with the model's predicted time and term breakdown.
 
@@ -248,11 +250,14 @@ def plan_auto(total_bytes: float = None, *, sizes: Sequence[float] = None,
                          " for the IR flow op")
     if sizes is not None:
         total_bytes = float(sum(sizes))
+    if policy is not None:
+        from .recovery import make_policy
+        policy = make_policy(policy)  # accept names as well as instances
     kw = {} if cfg is None else {"cfg": cfg}
     desc = planner.ScenarioDesc(total_bytes=float(total_bytes),
                                 n_threads=n_threads, workload=workload,
                                 max_parts=max_parts, max_vcis=max_vcis,
-                                faults=faults, **kw)
+                                faults=faults, policy=policy, **kw)
     choice = planner.choose_plan(desc, approaches=("part",))
     if sizes is not None:
         plan = plan_sized(sizes, aggr_bytes=choice.aggr_bytes,

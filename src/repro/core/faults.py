@@ -48,6 +48,8 @@ from typing import Optional, Sequence, Tuple
 import numpy as np
 
 from .fabric import US, Fabric, NetConfig, ReferenceFabric, _queue_scan
+from .recovery import (DEFAULT_BACKOFF, DEFAULT_MAX_RETRIES,
+                       DEFAULT_TIMEOUT_US, RecoveryPolicy)
 
 
 @dataclass(frozen=True)
@@ -69,6 +71,12 @@ class LinkDegrade:
         if not 0.0 < self.factor <= 1.0:
             raise ValueError(
                 f"degradation factor must be in (0, 1], got {self.factor}")
+        if self.t_start_us < 0.0:
+            # a negative window start can never match a transfer (the
+            # fabric clock starts at 0) — reject it loudly instead of
+            # silently declaring a dead window
+            raise ValueError(
+                f"t_start_us must be non-negative, got {self.t_start_us}")
         if self.t_end_us <= self.t_start_us:
             raise ValueError(
                 f"degradation window must have t_end_us > t_start_us, got "
@@ -103,13 +111,16 @@ class FaultSpec:
     """Everything the fault injector may do to one run, declared up
     front.  ``drop_prob`` is *per partition*; retransmission attempt a
     waits ``timeout_us * backoff ** a`` after the (would-be) delivery
-    before re-entering the queues, and attempt ``max_retries`` always
-    succeeds.  ``seed`` drives every random verdict via ``SeedSequence``
-    — no wall clock anywhere."""
+    before re-entering the queues (under the default ``fixed`` recovery
+    policy — :mod:`repro.core.recovery` makes the clock pluggable), and
+    attempt ``max_retries`` always succeeds.  ``seed`` drives every
+    random verdict via ``SeedSequence`` — no wall clock anywhere.  The
+    retry defaults are the shared :mod:`repro.core.recovery` constants,
+    the same ones the runtime's retry loop uses."""
     drop_prob: float = 0.0
-    timeout_us: float = 50.0
-    backoff: float = 2.0
-    max_retries: int = 8
+    timeout_us: float = DEFAULT_TIMEOUT_US
+    backoff: float = DEFAULT_BACKOFF
+    max_retries: int = DEFAULT_MAX_RETRIES
     degradations: Tuple[LinkDegrade, ...] = ()
     failures: Tuple[RankFailure, ...] = ()
     seed: int = 0
@@ -176,16 +187,33 @@ class FaultSpec:
         return fac
 
 
+#: Hard cap on a :class:`DropDraws` verdict matrix, in entries
+#: (``n_messages * max_retries``).  2**25 float64 entries is 256 MiB —
+#: comfortably above every committed grid (the 32k-rank weak-scaling
+#: sweep draws ~13M entries) while refusing the multi-GB allocations an
+#: XXL grid with a large retry budget would otherwise make silently.
+MAX_DRAW_ENTRIES = 2 ** 25
+
+
 class DropDraws:
     """Pre-drawn drop verdicts for one run: ``U[message, attempt]``
     uniforms from ``SeedSequence([seed, *extra])``.  Message m's attempt
     a is dropped iff ``a < max_retries`` and ``U[m, a] < p_msg[m]`` — a
     pure function of (message id, attempt), independent of engine and
     round structure.  ``extra`` entropy (e.g. the serving wave index)
-    keeps per-wave draws independent yet reproducible."""
+    keeps per-wave draws independent yet reproducible.  Allocation is
+    guarded by :data:`MAX_DRAW_ENTRIES`."""
 
     def __init__(self, spec: FaultSpec, n_messages: int,
                  extra: Sequence[int] = ()):
+        entries = int(n_messages) * spec.max_retries
+        if entries > MAX_DRAW_ENTRIES:
+            raise ValueError(
+                f"DropDraws allocation too large: n_messages "
+                f"({int(n_messages)}) * max_retries ({spec.max_retries}) "
+                f"= {entries} entries exceeds MAX_DRAW_ENTRIES "
+                f"({MAX_DRAW_ENTRIES}); shrink the grid or the retry "
+                f"budget")
         self.max_retries = spec.max_retries
         ss = np.random.SeedSequence([spec.seed, *extra])
         self.u = np.random.default_rng(ss).random(
@@ -270,7 +298,8 @@ def make_faulty_fabric(engine: str, cfg: NetConfig, n_vcis: int,
 
 
 def expected_retrans_s(msgs: Sequence[Tuple[float, float, float]],
-                       spec: FaultSpec, cfg: NetConfig) -> float:
+                       spec: FaultSpec, cfg: NetConfig,
+                       policy: Optional[RecoveryPolicy] = None) -> float:
     """Closed-form expected retransmission cost of a planned message
     mix — the autotuner's term (``repro.core.planner`` adds it to each
     candidate when ``ScenarioDesc.faults`` is set).
@@ -283,6 +312,13 @@ def expected_retrans_s(msgs: Sequence[Tuple[float, float, float]],
     of the occupancy, the *critical path* pays the timeout chain: the
     expected backoff delay of the worst message, ``sum_a p^a * timeout *
     backoff^(a-1)``.
+
+    ``policy`` (a :class:`repro.core.recovery.RecoveryPolicy`) makes the
+    delay term policy-aware: ``adaptive``/``hedged`` replace the fixed
+    timeout with the policy's planning estimate
+    (:meth:`~repro.core.recovery.RecoveryPolicy.planning_timeout_s`),
+    and ``hedged`` adds the expected wasted-duplicate occupancy.
+    ``None`` or ``fixed`` reproduce the pre-policy term bitwise.
     """
     total = 0.0
     worst_delay = 0.0
@@ -291,13 +327,24 @@ def expected_retrans_s(msgs: Sequence[Tuple[float, float, float]],
         if p <= 0.0:
             continue
         service = cfg.alpha_msg + cfg.alpha_nic + nbytes / cfg.beta
+        if policy is not None and policy.kind != "fixed":
+            base_s = policy.planning_timeout_s(service, spec.timeout_us)
+            dup_s = policy.planning_duplicate_s(count, service)
+        else:
+            base_s = None  # fixed path: keep the original fp expression
+            dup_s = 0.0
         expected_retx = 0.0
         delay = 0.0
         pk = 1.0
         for a in range(1, spec.max_retries + 1):
             pk *= p
             expected_retx += pk
-            delay += pk * spec.timeout_us * US * spec.backoff ** (a - 1)
+            if base_s is None:
+                delay += pk * spec.timeout_us * US * spec.backoff ** (a - 1)
+            else:
+                delay += pk * base_s * spec.backoff ** (a - 1)
         total += count * expected_retx * service
+        if dup_s:
+            total += dup_s
         worst_delay = max(worst_delay, delay)
     return total + worst_delay

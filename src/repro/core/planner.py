@@ -50,6 +50,7 @@ import numpy as np
 from . import commplan
 from .fabric import DEFAULT_NET, NetConfig
 from .faults import FaultSpec, expected_retrans_s
+from .recovery import RecoveryPolicy
 from .perfmodel import TPU_ICI_BETA, TPU_PEAK_FLOPS, Workload
 
 # The API variants the planner chooses between (a subset of the
@@ -79,7 +80,11 @@ class ScenarioDesc:
     every candidate its expected retransmission cost: coarse plans
     retransmit whole buffers on one lost partition, fine plans resend
     one message — the robustness trade-off the paper's model does not
-    price but the fault-injection engine measures.
+    price but the fault-injection engine measures.  ``policy`` (a
+    :class:`~repro.core.recovery.RecoveryPolicy`) makes the retrans
+    term policy-aware: the adaptive estimator's converged RTO (or the
+    hedge delay plus expected duplicate occupancy) replaces the fixed
+    timeout chain; ``None`` keeps the fixed-clock term bitwise.
     """
     total_bytes: float
     n_threads: int = 1
@@ -88,6 +93,7 @@ class ScenarioDesc:
     max_parts: int = 512
     max_vcis: int = 32
     faults: Optional[FaultSpec] = None
+    policy: Optional[RecoveryPolicy] = None
 
     def __post_init__(self):
         if self.total_bytes <= 0:
@@ -366,12 +372,14 @@ def predict(desc: ScenarioDesc, cand: Candidate) -> PlanChoice:
     (:func:`repro.core.faults.expected_retrans_s`).  With faults absent
     (or degradation-only — windows shift all candidates alike) the
     healthy prediction is returned unchanged, so no-fault autotune
-    records are untouched."""
+    records are untouched.  ``desc.policy`` swaps the term's recovery
+    clock (:mod:`repro.core.recovery`); ``None`` keeps the fixed one."""
     choice = _predict_healthy(desc, cand)
     f = desc.faults
     if f is None or not f.drops_enabled:
         return choice
-    extra = expected_retrans_s(_candidate_messages(desc, cand), f, desc.cfg)
+    extra = expected_retrans_s(_candidate_messages(desc, cand), f, desc.cfg,
+                               policy=desc.policy)
     return PlanChoice(choice.approach, choice.theta, choice.aggr_bytes,
                       choice.n_vcis, choice.predicted_s + extra,
                       choice.terms + (("retrans", extra),))

@@ -83,6 +83,7 @@ from .fabric import (US, DEFAULT_NET, CappedMemo, Fabric, IntentBatch,
                      NetConfig, ReferenceFabric)
 from .faults import DropDraws, FaultSpec, make_faulty_fabric
 from .partition import PartitionedRequest
+from .recovery import RecoveryPolicy, make_policy
 from .topology import CartTopology, HaloSpec
 
 # The fabric engines selectable via the drivers' ``engine`` argument.
@@ -1390,10 +1391,19 @@ def _tail_quantile(values: np.ndarray, q: float) -> float:
 
 @dataclass
 class ServingResult:
-    """Open-loop trace-driven serving run: tail latency + goodput."""
+    """Open-loop trace-driven serving run: tail latency + goodput.
+
+    ``latency_s`` covers *completed* requests only; with overload
+    protection active (``queue_depth`` / ``deadline_us``) the shed ones
+    are counted in ``n_shed`` and excluded from the tails, which is the
+    point — shedding trades completed-request count for a bounded tail.
+    ``goodput_retention`` is the fraction of offered requests that
+    completed within the deadline (all completed requests when no
+    deadline is set).
+    """
     approach: str
     arrival: str               # arrival model name (repro.core.arrivals)
-    n_requests: int
+    n_requests: int            # offered requests (the trace length)
     n_tenants: int
     n_stages: int
     offered_rps: float         # empirical offered load of the trace
@@ -1403,26 +1413,47 @@ class ServingResult:
     n_waves: int               # admission waves fed to fab.advance
     n_retransmits: int = 0     # dropped messages re-queued (faults only)
     retrans_bytes: float = 0.0  # payload re-sent by those retransmissions
+    policy: str = "fixed"      # recovery policy (repro.core.recovery)
+    n_shed: int = 0            # requests shed at admission / past deadline
+    n_completed: Optional[int] = None   # None: every request completed
+    n_good: Optional[int] = None        # completed within the deadline
+    n_hedges: int = 0          # hedge timers fired (hedged policy)
+    n_suppressed: int = 0      # duplicate deliveries suppressed
+    duplicate_bytes: float = 0.0  # wasted payload of suppressed hedges
+
+    @property
+    def completed(self) -> int:
+        return (self.n_completed if self.n_completed is not None
+                else self.n_requests)
 
     @property
     def goodput_rps(self) -> float:
-        """Completed requests per second of *fabric* time: requests over
-        the first-arrival -> last-completion makespan.  Tracks the
+        """Completed requests per second of *fabric* time: completions
+        over the first-arrival -> last-completion makespan.  Tracks the
         offered load while the fabric keeps up and saturates at the
         fabric's drain rate once queueing compounds."""
-        return self.n_requests / self.tts_s if self.tts_s > 0.0 else 0.0
+        return self.completed / self.tts_s if self.tts_s > 0.0 else 0.0
+
+    @property
+    def goodput_retention(self) -> float:
+        """Fraction of offered requests that completed in time."""
+        good = self.n_good if self.n_good is not None else self.completed
+        return good / self.n_requests if self.n_requests else 0.0
 
     @property
     def p50_s(self) -> float:
-        return _tail_quantile(self.latency_s, 0.50)
+        return _tail_quantile(self.latency_s, 0.50) \
+            if self.latency_s.size else 0.0
 
     @property
     def p99_s(self) -> float:
-        return _tail_quantile(self.latency_s, 0.99)
+        return _tail_quantile(self.latency_s, 0.99) \
+            if self.latency_s.size else 0.0
 
     @property
     def p999_s(self) -> float:
-        return _tail_quantile(self.latency_s, 0.999)
+        return _tail_quantile(self.latency_s, 0.999) \
+            if self.latency_s.size else 0.0
 
     def as_dict(self) -> dict:
         return {
@@ -1434,7 +1465,8 @@ class ServingResult:
             "n_stages": self.n_stages,
             "offered_rps": self.offered_rps,
             "goodput_rps": self.goodput_rps,
-            "mean_us": float(self.latency_s.mean()) / US,
+            "mean_us": (float(self.latency_s.mean()) / US
+                        if self.latency_s.size else 0.0),
             "p50_us": self.p50_s / US,
             "p99_us": self.p99_s / US,
             "p999_us": self.p999_s / US,
@@ -1443,6 +1475,13 @@ class ServingResult:
             "n_waves": self.n_waves,
             "n_retransmits": self.n_retransmits,
             "retrans_bytes": self.retrans_bytes,
+            "policy": self.policy,
+            "n_shed": self.n_shed,
+            "n_completed": self.completed,
+            "goodput_retention": self.goodput_retention,
+            "n_hedges": self.n_hedges,
+            "n_suppressed": self.n_suppressed,
+            "duplicate_bytes": self.duplicate_bytes,
         }
 
 
@@ -1453,6 +1492,8 @@ def simulate_serving(approach: str, *, arrival: str = "poisson",
                      aggr_bytes: float = 0.0, compute_us: float = 0.0,
                      window_us: float = 5.0, seed: int = 0,
                      faults: Optional[FaultSpec] = None,
+                     policy=None, queue_depth: Optional[int] = None,
+                     deadline_us: Optional[float] = None,
                      cfg: NetConfig = DEFAULT_NET,
                      engine: str = "vector") -> ServingResult:
     """Open-loop serving: a request trace drives pipeline-parallel decode
@@ -1502,9 +1543,33 @@ def simulate_serving(approach: str, *, arrival: str = "poisson",
     faulty runs are exactly reproducible and engine-independent; a
     no-op spec (no drops, no degradations) leaves every byte of the
     fault-free run unchanged.
+
+    ``policy`` (:mod:`repro.core.recovery`: ``None``/"fixed",
+    "adaptive", "hedged" or a :class:`RecoveryPolicy`) sets the
+    retransmission clock for dropped messages; estimator state persists
+    across waves, so the adaptive RTO and the hedge delay personalize
+    to the trace.  The default reproduces the pre-policy fixed timeout
+    bit-for-bit.
+
+    Overload protection: ``queue_depth`` caps each tenant's in-flight
+    admissions — a request arriving while its tenant already has
+    ``queue_depth`` requests in the pipeline is shed at admission
+    (completions land at wave granularity, so admission sees the state
+    as of the previous wave).  ``deadline_us`` sheds a request at any
+    hop boundary once its age exceeds the deadline, freeing the fabric
+    mid-pipeline.  Shed requests are excluded from the latency tails
+    and counted in ``n_shed``; ``goodput_retention`` reports the
+    within-deadline completion fraction, which is what plateaus (rather
+    than p99 diverging) when offered-load sweeps pass saturation.
+    ``None`` (the default) disables both and leaves the run unchanged.
     """
     if n_stages < 2:
         raise ValueError("n_stages must be at least 2 (one pipeline hop)")
+    if queue_depth is not None and queue_depth < 1:
+        raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
+    if deadline_us is not None and deadline_us <= 0.0:
+        raise ValueError(
+            f"deadline_us must be positive, got {deadline_us}")
     sched = _lookup(approach)
     trace = make_trace(arrival, rate_rps, n_requests, n_tenants=n_tenants,
                        skew=skew, seed=seed)
@@ -1513,8 +1578,13 @@ def simulate_serving(approach: str, *, arrival: str = "poisson",
     else:
         fab = _make_fabric(engine, cfg, n_vcis, n_ranks=n_stages)
     drops_on = faults is not None and faults.drops_enabled
+    pol = make_policy(policy)
+    state = pol.fresh(faults.timeout_us, faults.backoff) \
+        if drops_on else None
+    deadline = deadline_us * US if deadline_us is not None else None
     n_retransmits = 0
     retrans_bytes = 0.0
+    n_shed = 0
     ready = np.zeros((1, theta))
     if compute_us > 0.0:
         # partition j ready at (j+1)/theta of the per-hop decode compute
@@ -1526,6 +1596,12 @@ def simulate_serving(approach: str, *, arrival: str = "poisson",
         (float(t), r, 0) for r, t in enumerate(trace.t)]
     heapq.heapify(pending)
     done = np.zeros(len(trace))
+    # overload protection state: exited[r] > 0 once r left the system
+    # (completed or shed mid-pipeline); per-tenant admission lists are
+    # pruned as the heap's monotone pop order advances the clock
+    exited = np.zeros(len(trace))
+    shed = np.zeros(len(trace), dtype=bool)
+    tenant_live: List[List[int]] = [[] for _ in range(n_tenants)]
     n_waves = 0
     while pending:
         horizon = pending[0][0] + window
@@ -1538,6 +1614,24 @@ def simulate_serving(approach: str, *, arrival: str = "poisson",
         cols = []
         completions: List[Tuple[int, int, float]] = []
         for t_start, req, hop in wave:
+            if deadline is not None \
+                    and t_start - trace.t[req] > deadline:
+                # past its deadline mid-pipeline: shed now, free the
+                # fabric of the remaining hops
+                shed[req] = True
+                n_shed += 1
+                exited[req] = t_start
+                continue
+            if hop == 0 and queue_depth is not None:
+                ten = int(trace.tenant[req])
+                live = [r for r in tenant_live[ten]
+                        if exited[r] == 0.0 or exited[r] > t_start]
+                tenant_live[ten] = live
+                if len(live) >= queue_depth:
+                    shed[req] = True
+                    n_shed += 1
+                    continue
+                live.append(req)
             sc = Scenario(n_threads=1, theta=theta, part_bytes=part_bytes,
                           ready=ready, n_vcis=n_vcis, aggr_bytes=aggr_bytes,
                           cfg=cfg, src=hop, dst=hop + 1, t0=t_start)
@@ -1585,15 +1679,18 @@ def simulate_serving(approach: str, *, arrival: str = "poisson",
                 while pend.size:
                     order = np.argsort(t_cur[pend], kind="stable")
                     sel = pend[order]
-                    arr = fab.advance(t_cur[sel], mnb[sel], mvci[sel],
+                    t_sub = t_cur[sel]
+                    arr = fab.advance(t_sub, mnb[sel], mvci[sel],
                                       mth[sel], mput[sel], mcopy[sel],
                                       msrc[sel], mdst[sel])
                     drop = draws.dropped(sel, attempt, p_msg[sel])
+                    state.observe(msrc[sel], mdst[sel], t_sub, arr,
+                                  mnb[sel], attempt, ~drop)
                     arrivals[sel[~drop]] = arr[~drop]
                     if drop.any():
-                        t_cur[sel[drop]] = (
-                            arr[drop] + faults.timeout_us * US
-                            * faults.backoff ** attempt)
+                        t_cur[sel[drop]] = state.retrans_times(
+                            msrc[sel[drop]], mdst[sel[drop]],
+                            t_sub[drop], arr[drop], attempt)
                         n_retransmits += int(drop.sum())
                         retrans_bytes += float(mnb[sel[drop]].sum())
                     pend = np.sort(sel[drop])
@@ -1607,14 +1704,26 @@ def simulate_serving(approach: str, *, arrival: str = "poisson",
                 heapq.heappush(pending, (float(t), req, hop + 1))
             else:
                 done[req] = t
+                exited[req] = t
+    completed = done > 0.0
+    latency = done[completed] - trace.t[completed]
+    n_completed = int(np.count_nonzero(completed))
+    n_good = n_completed if deadline is None \
+        else int(np.count_nonzero(latency <= deadline))
     return ServingResult(approach=approach, arrival=arrival,
                          n_requests=len(trace), n_tenants=n_tenants,
                          n_stages=n_stages,
                          offered_rps=trace.offered_rps,
-                         latency_s=done - trace.t, tts_s=float(done.max()),
+                         latency_s=latency, tts_s=float(done.max()),
                          n_messages=fab.n_messages, n_waves=n_waves,
                          n_retransmits=n_retransmits,
-                         retrans_bytes=retrans_bytes)
+                         retrans_bytes=retrans_bytes,
+                         policy=pol.kind, n_shed=n_shed,
+                         n_completed=n_completed, n_good=n_good,
+                         n_hedges=state.n_hedges if state else 0,
+                         n_suppressed=state.n_suppressed if state else 0,
+                         duplicate_bytes=state.duplicate_bytes
+                         if state else 0.0)
 
 
 @dataclass
@@ -1639,6 +1748,15 @@ class FaultyResult:
     rounds: int                # retransmission rounds until drained
     goodput_bps: float         # delivered payload bytes / tts
     clean_goodput_bps: float
+    policy: str = "fixed"      # recovery policy (repro.core.recovery)
+    n_hedges: int = 0          # hedge timers fired (hedged policy)
+    n_suppressed: int = 0      # duplicate deliveries suppressed
+    duplicate_bytes: float = 0.0  # wasted payload of suppressed hedges
+    # per-message clocks of the drops path (None elsewhere): original
+    # submission and final delivery, for the chaos harness's monotone
+    # and conservation invariants
+    submit_s: Optional[np.ndarray] = None
+    arrival_s: Optional[np.ndarray] = None
 
     @property
     def recovery_s(self) -> float:
@@ -1669,6 +1787,10 @@ class FaultyResult:
             "rounds": self.rounds,
             "goodput_gbps": self.goodput_bps / 1e9,
             "clean_goodput_gbps": self.clean_goodput_bps / 1e9,
+            "policy": self.policy,
+            "n_hedges": self.n_hedges,
+            "n_suppressed": self.n_suppressed,
+            "duplicate_bytes": self.duplicate_bytes,
         }
 
 
@@ -1680,7 +1802,7 @@ def simulate_faulty(approach: str, *, faults: Optional[FaultSpec],
                     bytes_per_cell: float = 8.0, halo_width: int = 1,
                     face_bytes: Optional[Sequence[float]] = None,
                     ready=None, n_vcis: int = 1, aggr_bytes: float = 0.0,
-                    cfg: NetConfig = DEFAULT_NET,
+                    policy=None, cfg: NetConfig = DEFAULT_NET,
                     engine: str = "vector") -> FaultyResult:
     """The stencil exchange of :func:`simulate_stencil` on a faulty
     fabric (:mod:`repro.core.faults`).
@@ -1711,9 +1833,20 @@ def simulate_faulty(approach: str, *, faults: Optional[FaultSpec],
     so ``drop_prob > 0`` rejects them; degradation-only specs run every
     schedule.  ``recovery_s``/``goodput_bps`` compare against the same
     scenario on a healthy fabric.
+
+    ``policy`` (:mod:`repro.core.recovery`) sets the retransmission
+    clock: ``None``/"fixed" is the timeout-and-backoff above, exactly;
+    "adaptive" estimates a per-link RTO from the round's own observed
+    completions (Jacobson EWMA, Karn's rule); "hedged" re-enters
+    dropped messages at a quantile hedge delay from *submission* and
+    accounts the suppressed duplicates of slow deliveries.  Drop
+    verdicts are (message, attempt)-pure, so the policy changes only
+    the clocks — delivered/dropped sets, retransmit counts and round
+    structure are policy-invariant here.
     """
     if faults is None:
         faults = FaultSpec()
+    pol = make_policy(policy)
     topo, face_bytes, sched, shared_ready, ready_arr = _stencil_setup(
         approach, dims=dims, topo=topo, periodic=periodic, theta=theta,
         n_threads=n_threads, local_shape=local_shape,
@@ -1733,7 +1866,8 @@ def simulate_faulty(approach: str, *, faults: Optional[FaultSpec],
             seed=faults.seed, rank_tts_s=r.rank_tts_s, time_s=r.time_s,
             tts_s=r.tts_s, clean_tts_s=r.tts_s, n_messages=r.n_messages,
             n_delivered=r.n_messages, n_retransmits=0, retrans_bytes=0.0,
-            rounds=1, goodput_bps=goodput, clean_goodput_bps=goodput)
+            rounds=1, goodput_bps=goodput, clean_goodput_bps=goodput,
+            policy=pol.kind)
     clean = simulate_stencil(
         approach, topo=topo, theta=theta, n_threads=n_threads,
         face_bytes=face_bytes, ready=ready, n_vcis=n_vcis,
@@ -1764,7 +1898,7 @@ def simulate_faulty(approach: str, *, faults: Optional[FaultSpec],
             n_retransmits=0, retrans_bytes=0.0, rounds=1,
             goodput_bps=payload / tts if tts > 0.0 else 0.0,
             clean_goodput_bps=payload / clean.tts_s
-            if clean.tts_s > 0.0 else 0.0)
+            if clean.tts_s > 0.0 else 0.0, policy=pol.kind)
     flows: List[Scenario] = []
     batches: List[IntentBatch] = []
     memo: Dict[tuple, Optional[IntentBatch]] = {}
@@ -1797,6 +1931,7 @@ def simulate_faulty(approach: str, *, faults: Optional[FaultSpec],
     p_msg = faults.message_drop_prob(pcount)
     n = int(t_ready.shape[0])
     draws = DropDraws(faults, n)
+    state = pol.fresh(faults.timeout_us, faults.backoff)
     final = np.empty(n)
     t_cur = t_ready.copy()
     pend = np.arange(n)
@@ -1808,14 +1943,18 @@ def simulate_faulty(approach: str, *, faults: Optional[FaultSpec],
         rounds += 1
         order = np.argsort(t_cur[pend], kind="stable")
         sel = pend[order]
-        arr = fab.advance(t_cur[sel], nbytes[sel], vci[sel], thread[sel],
+        t_sub = t_cur[sel]
+        arr = fab.advance(t_sub, nbytes[sel], vci[sel], thread[sel],
                           put[sel], am_copy[sel], src_col[sel],
                           dst_col[sel])
         drop = draws.dropped(sel, attempt, p_msg[sel])
+        state.observe(src_col[sel], dst_col[sel], t_sub, arr,
+                      nbytes[sel], attempt, ~drop)
         final[sel[~drop]] = arr[~drop]
         if drop.any():
-            t_cur[sel[drop]] = (arr[drop] + faults.timeout_us * US
-                                * faults.backoff ** attempt)
+            t_cur[sel[drop]] = state.retrans_times(
+                src_col[sel[drop]], dst_col[sel[drop]], t_sub[drop],
+                arr[drop], attempt)
             n_retransmits += int(drop.sum())
             retrans_bytes += float(nbytes[sel[drop]].sum())
         pend = np.sort(sel[drop])
@@ -1834,7 +1973,11 @@ def simulate_faulty(approach: str, *, faults: Optional[FaultSpec],
         retrans_bytes=retrans_bytes, rounds=rounds,
         goodput_bps=payload / tts if tts > 0.0 else 0.0,
         clean_goodput_bps=payload / clean.tts_s
-        if clean.tts_s > 0.0 else 0.0)
+        if clean.tts_s > 0.0 else 0.0,
+        policy=pol.kind, n_hedges=state.n_hedges,
+        n_suppressed=state.n_suppressed,
+        duplicate_bytes=state.duplicate_bytes,
+        submit_s=t_ready, arrival_s=final)
 
 
 @dataclass

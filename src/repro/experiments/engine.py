@@ -453,6 +453,114 @@ def run_ir(params: Mapping[str, Any],
             "n_messages": float(res.n_messages)}
 
 
+# The recovery spec's scenario table: per (scenario, level) the
+# parameters that differ, over shared bases below.  Levels are fault /
+# load intensities; the *timeouts are deliberately mistuned* (above the
+# 50us default) — the paper-level point of the adaptive policy is that
+# a fixed clock tuned for one fabric is wrong on another.
+_RECOVERY_LEVELS = {
+    ("stencil", 0): dict(fault_rate=0.02, timeout_us=80.0),
+    ("stencil", 1): dict(fault_rate=0.05, timeout_us=150.0),
+    ("serving", 0): dict(fault_rate=0.01, timeout_us=100.0),
+    ("serving", 1): dict(fault_rate=0.02, timeout_us=150.0),
+    ("shed", 0): dict(rate_rps=120000.0),
+    ("shed", 1): dict(rate_rps=240000.0),
+}
+
+
+def run_recovery(params: Mapping[str, Any],
+                 engine: str = DEFAULT_ENGINE) -> Dict[str, float]:
+    """Recovery policies vs the fixed clock, guarded keep-only-if-better.
+
+    Three scenarios, selected by ``scenario`` at intensity ``level``
+    (:data:`_RECOVERY_LEVELS`):
+
+    * ``stencil`` — :func:`simulate_faulty` under drops with a mistuned
+      fixed timeout vs the adaptive per-link RTO.  The committed metric
+      ``adaptive_tts_us`` is *guarded*: the runner simulates both
+      policies and keeps the adaptive result only when it is no worse
+      (``adaptive_kept``), the same discipline as the IR pipeline's
+      measured guard — so ``adaptive_tts_us <= fixed_tts_us`` holds on
+      every record by construction, and ``adaptive_raw_tts_us`` records
+      what the estimator actually did.
+    * ``serving`` — faulty open-loop serving, fixed vs hedged.  Guarded
+      on two conditions: the hedged p999 must not exceed the fixed one
+      AND the hedged bytes on the wire (retransmissions + suppressed
+      duplicates) must stay within 2x the fixed policy's
+      retransmission bytes (``dup_ratio``).
+    * ``shed`` — overload protection past saturation: the same offered
+      load with and without per-tenant depth caps + deadline shedding.
+      The committed records pin the plateau (bounded ``shed_p99_us``,
+      held ``shed_goodput_rps``) against the unprotected p99
+      divergence.
+    """
+    scenario = params["scenario"]
+    lvl = _RECOVERY_LEVELS[(scenario, int(params["level"]))]
+    if scenario == "stencil":
+        spec = flt.FaultSpec(drop_prob=lvl["fault_rate"],
+                             timeout_us=lvl["timeout_us"],
+                             seed=params.get("fault_seed", 3))
+        kw = dict(dims=(4, 4), theta=8, face_bytes=[131072.0] * 2,
+                  n_vcis=2, engine=engine)
+        fixed = sim.simulate_faulty("part", faults=spec, policy="fixed",
+                                    **kw)
+        adapt = sim.simulate_faulty("part", faults=spec,
+                                    policy="adaptive", **kw)
+        kept = adapt.tts_s <= fixed.tts_s
+        tts = adapt.tts_s if kept else fixed.tts_s
+        return {"fixed_tts_us": fixed.tts_s / sim.US,
+                "adaptive_raw_tts_us": adapt.tts_s / sim.US,
+                "adaptive_tts_us": tts / sim.US,
+                "adaptive_gain": fixed.tts_s / tts,
+                "adaptive_kept": float(kept),
+                "clean_tts_us": fixed.clean_tts_s / sim.US,
+                "n_retransmits": float(fixed.n_retransmits),
+                "n_messages": float(fixed.n_messages)}
+    if scenario == "serving":
+        spec = flt.FaultSpec(drop_prob=lvl["fault_rate"],
+                             timeout_us=lvl["timeout_us"],
+                             seed=params.get("fault_seed", 2))
+        kw = dict(arrival="poisson", rate_rps=8000.0, n_requests=96,
+                  n_tenants=4, skew=0.3, theta=8, part_bytes=16384.0,
+                  n_vcis=4, compute_us=2.0, seed=params.get("seed", 2),
+                  faults=spec, engine=engine)
+        fixed = sim.simulate_serving("part", policy="fixed", **kw)
+        hedged = sim.simulate_serving("part", policy="hedged", **kw)
+        sent = hedged.retrans_bytes + hedged.duplicate_bytes
+        ratio = sent / max(fixed.retrans_bytes, 1.0)
+        kept = hedged.p999_s <= fixed.p999_s and ratio <= 2.0
+        p999 = hedged.p999_s if kept else fixed.p999_s
+        return {"fixed_p999_us": fixed.p999_s / sim.US,
+                "hedged_raw_p999_us": hedged.p999_s / sim.US,
+                "hedged_p999_us": p999 / sim.US,
+                "hedged_gain": fixed.p999_s / p999,
+                "hedged_kept": float(kept),
+                "dup_ratio": ratio,
+                "n_hedges": float(hedged.n_hedges),
+                "n_suppressed": float(hedged.n_suppressed),
+                "duplicate_bytes": float(hedged.duplicate_bytes),
+                "n_retransmits": float(fixed.n_retransmits),
+                "n_messages": float(fixed.n_messages)}
+    if scenario == "shed":
+        kw = dict(arrival="poisson", rate_rps=lvl["rate_rps"],
+                  n_requests=128, n_tenants=2, theta=8,
+                  part_bytes=32768.0, n_vcis=2, compute_us=2.0,
+                  seed=params.get("seed", 0), engine=engine)
+        base = sim.simulate_serving("part", **kw)
+        shed = sim.simulate_serving("part", queue_depth=6,
+                                    deadline_us=300.0, **kw)
+        return {"base_p99_us": base.p99_s / sim.US,
+                "shed_p99_us": shed.p99_s / sim.US,
+                "base_goodput_rps": base.goodput_rps,
+                "shed_goodput_rps": shed.goodput_rps,
+                "goodput_retention": shed.goodput_retention,
+                "n_shed": float(shed.n_shed),
+                "n_completed": float(shed.completed),
+                "offered_rps": base.offered_rps,
+                "n_messages": float(base.n_messages)}
+    raise ValueError(f"unknown recovery scenario {scenario!r}")
+
+
 RUNNERS = {
     "oneshot": run_oneshot,
     "steady": run_steady,
@@ -465,6 +573,7 @@ RUNNERS = {
     "membership": run_membership,
     "servingfaults": run_servingfaults,
     "ir": run_ir,
+    "recovery": run_recovery,
 }
 
 # Metric a spec's gain derives from, per runner.
@@ -480,6 +589,7 @@ PRIMARY_METRIC = {
     "membership": "tts_us",
     "servingfaults": "p99_us",
     "ir": "ir_us",
+    "recovery": "adaptive_tts_us",
 }
 
 

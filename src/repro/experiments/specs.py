@@ -267,11 +267,31 @@ IR_PASSES = SweepSpec(
          " ir_us <= pointwise_us on every record",
 )
 
+RECOVERY = SweepSpec(
+    name="recovery",
+    runner="recovery",
+    grid={"scenario": ("stencil", "serving", "shed"),
+          "level": (0, 1)},
+    fixed={"fault_seed": 3, "seed": 2},
+    smoke={"scenario": ("stencil", "serving", "shed"),
+           "level": (1,)},
+    tolerances={"adaptive_kept": 0.0, "hedged_kept": 0.0,
+                "n_retransmits": 0.0, "n_hedges": 0.0,
+                "n_suppressed": 0.0, "n_shed": 0.0,
+                "n_completed": 0.0},
+    note="recovery policies vs the fixed retransmission clock:"
+         " guarded adaptive RTO (<= fixed TTS on every stencil"
+         " record), hedged retransmits (p999 cut at <= 2x duplicate"
+         " bytes on faulty serving), and overload shedding (goodput"
+         " plateau past saturation)",
+)
+
 SPECS: Dict[str, SweepSpec] = {
     s.name: s for s in (FIG4, FIG5, FIG6, FIG7, FIG8, STEADY, HALO1D,
                         STENCIL3D, WEAK_SCALING, WEAK_SCALING_XL,
                         WEAK_SCALING_XXL, IMBALANCE, SERVING, AUTOTUNE,
-                        FAULTS, MEMBERSHIP, SERVING_FAULTS, IR_PASSES)
+                        FAULTS, MEMBERSHIP, SERVING_FAULTS, IR_PASSES,
+                        RECOVERY)
 }
 
 

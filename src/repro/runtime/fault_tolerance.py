@@ -25,6 +25,45 @@ from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Callable, Deque, Dict, List, Optional
 
+from ..core.recovery import (DEFAULT_BACKOFF, DEFAULT_MAX_RETRIES,
+                             DEFAULT_TIMEOUT_US)
+
+# Retry knobs, sourced from the shared RecoveryPolicy defaults
+# (repro.core.recovery) so the runtime and the simulator cannot drift
+# apart on two hardcoded copies of the same numbers.  The runtime's
+# timescale is milliseconds where the fabric's is microseconds, hence
+# the 1e-3 on the base delay; retries and backoff carry over directly.
+RETRY_MAX_ATTEMPTS = DEFAULT_MAX_RETRIES
+RETRY_BACKOFF = DEFAULT_BACKOFF
+RETRY_BASE_DELAY_S = DEFAULT_TIMEOUT_US * 1e-3
+# A heartbeat is considered stale after one missed backoff interval —
+# the same factor the fabric applies between retransmission attempts.
+HEARTBEAT_STALE_FACTOR = DEFAULT_BACKOFF
+
+
+def retry_transient(fn: Callable, *, max_attempts: int = RETRY_MAX_ATTEMPTS,
+                    backoff: float = RETRY_BACKOFF,
+                    base_delay_s: float = RETRY_BASE_DELAY_S,
+                    sleep: Callable[[float], None] = time.sleep):
+    """Call ``fn()`` with exponential-backoff retries on exception.
+
+    Attempt a (0-based) sleeps ``base_delay_s * backoff ** a`` before
+    retrying; the last attempt re-raises.  The defaults are the shared
+    :mod:`repro.core.recovery` constants — the same truncated-retry
+    discipline the fabric's fault injector applies to dropped
+    partitions, at runtime timescale.  Used for transient checkpoint
+    I/O failures; ``sleep`` is injectable for tests.
+    """
+    if max_attempts < 1:
+        raise ValueError(f"max_attempts must be >= 1, got {max_attempts}")
+    for a in range(max_attempts):
+        try:
+            return fn()
+        except Exception:
+            if a == max_attempts - 1:
+                raise
+            sleep(base_delay_s * backoff ** a)
+
 
 @dataclass
 class StragglerMonitor:
@@ -83,10 +122,15 @@ class Heartbeat:
         self._thread.start()
         return self
 
+    def stale_after(self) -> float:
+        """Seconds after which a missing stamp means the rank is dead —
+        one missed backoff interval, per the shared recovery factor."""
+        return HEARTBEAT_STALE_FACTOR * self.interval
+
     def __exit__(self, *exc):
         self._stop.set()
         if self._thread:
-            self._thread.join(timeout=2 * self.interval)
+            self._thread.join(timeout=self.stale_after())
 
 
 class PreemptionGuard:
@@ -170,8 +214,12 @@ def run_training_loop(*, step_fn: Callable, state, start_step: int,
         finally:
             checkpointer.wait()
             if completed > start_step and last_saved != completed:
-                checkpointer.save_async(completed, state)
-                checkpointer.wait()
+                # the final save is the one that must not be lost to a
+                # transient I/O hiccup: retry it on the shared backoff
+                def _final_save():
+                    checkpointer.save_async(completed, state)
+                    checkpointer.wait()
+                retry_transient(_final_save)
     return LoopReport(steps_run=len(losses), final_step=completed,
                       preempted=preempted,
                       straggler_steps=list(straggler.straggler_steps),

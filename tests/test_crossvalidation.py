@@ -7,13 +7,20 @@ independently, so agreement here catches drift in either.
     small haircut on the paper's bandwidth-bound prediction;
   * ``simulate_imbalance`` empirical mean ready-spread vs eq (8)
     ``Workload.delay_seconds`` — the noise sampling and the closed-form
-    delay rate describe the same distribution.
+    delay rate describe the same distribution;
+  * the truncated-geometric retransmission model behind
+    ``expected_retrans_s`` vs brute-force outcome enumeration, and vs
+    retransmission counts *measured* by ``simulate_faulty`` over a
+    (drop_prob, theta) grid of pinned seeds.
 """
+
+import statistics
 
 import pytest
 
 from repro.core import perfmodel as pm
 from repro.core import simulator as sim
+from repro.core.faults import FaultSpec
 
 BETA = sim.DEFAULT_NET.beta
 
@@ -101,3 +108,82 @@ class TestImbalanceDelayVsModel:
         tp = sim.simulate_imbalance("part", **kw)
         tb = sim.simulate_imbalance("pt2pt_single", **kw)
         assert tb.time_s > tp.time_s
+
+
+class TestRetransmissionVsClosedForm:
+    """The truncated-geometric model inside ``expected_retrans_s``
+    (``E[retx] = p + p^2 + ... + p^R``, attempt R always succeeds) vs
+    (a) brute-force enumeration of every outcome and (b) retransmission
+    counts measured by the fault engine over a (drop_prob, theta) grid.
+
+    The grid tolerance is statistical: with 20 pinned seeds the worst
+    cell (theta=2 at p=0.02, ~2.6 expected retransmits per run) sits
+    within 23% of the model; 0.35 is the drift alarm.
+    """
+
+    KW = dict(dims=(4, 4), face_bytes=(32768.0, 32768.0), n_vcis=2)
+    SEEDS = range(20)
+
+    @staticmethod
+    def _model_retx(p: float, retries: int) -> float:
+        return sum(p ** a for a in range(1, retries + 1))
+
+    def test_brute_force_enumeration_pins_the_sum(self):
+        """Enumerate the outcome distribution directly: j failures
+        before success has probability ``p^j (1-p)`` for j < R and
+        ``p^R`` for the forced final attempt.  Its mean must equal the
+        geometric sum the planner charges."""
+        for p in (0.05, 0.2, 0.5, 0.9):
+            for retries in (1, 2, 5, 8):
+                probs = [p ** j * (1.0 - p) for j in range(retries)]
+                probs.append(p ** retries)
+                assert sum(probs) == pytest.approx(1.0)
+                brute = sum(j * q for j, q in enumerate(probs))
+                assert brute == pytest.approx(
+                    self._model_retx(p, retries))
+
+    def test_brute_force_enumeration_pins_the_delay_chain(self):
+        """Same enumeration for the backoff-delay term: j failures wait
+        ``sum_{a<=j} timeout * backoff^(a-1)``; the expectation is the
+        ``sum_a p^a * timeout * backoff^(a-1)`` chain in
+        ``expected_retrans_s``."""
+        p, retries, timeout, backoff = 0.3, 6, 50.0, 2.0
+        probs = [p ** j * (1.0 - p) for j in range(retries)]
+        probs.append(p ** retries)
+        brute = sum(q * sum(timeout * backoff ** (a - 1)
+                            for a in range(1, j + 1))
+                    for j, q in enumerate(probs))
+        chain = sum(p ** a * timeout * backoff ** (a - 1)
+                    for a in range(1, retries + 1))
+        assert brute == pytest.approx(chain)
+
+    @pytest.mark.parametrize("drop", [0.02, 0.1])
+    @pytest.mark.parametrize("theta", [2, 8])
+    def test_measured_retransmits_match_model(self, drop, theta):
+        """``part`` wire messages carry one partition each, so every
+        message drops at exactly ``drop_prob`` — the measured mean
+        retransmission count over pinned seeds must track
+        ``n_messages * E[retx]``."""
+        runs = [sim.simulate_faulty(
+            "part", faults=FaultSpec(drop_prob=drop, seed=s),
+            theta=theta, **self.KW) for s in self.SEEDS]
+        spec = FaultSpec(drop_prob=drop)
+        expect = runs[0].n_delivered * self._model_retx(
+            drop, spec.max_retries)
+        measured = statistics.mean(r.n_retransmits for r in runs)
+        assert measured == pytest.approx(expect, rel=0.35)
+
+    def test_measured_bulk_composes_per_partition(self):
+        """``pt2pt_single`` carries every partition in one message, so
+        the per-message drop probability composes to
+        ``1 - (1-p)^theta`` — the robustness mechanism itself."""
+        drop, theta = 0.05, 8
+        spec = FaultSpec(drop_prob=drop)
+        p_msg = float(spec.message_drop_prob(theta))
+        runs = [sim.simulate_faulty(
+            "pt2pt_single", faults=FaultSpec(drop_prob=drop, seed=s),
+            theta=theta, **self.KW) for s in self.SEEDS]
+        expect = runs[0].n_delivered * self._model_retx(
+            p_msg, spec.max_retries)
+        measured = statistics.mean(r.n_retransmits for r in runs)
+        assert measured == pytest.approx(expect, rel=0.25)

@@ -1,0 +1,416 @@
+"""The adaptive recovery layer (repro.core.recovery) and its threading
+through the drivers:
+
+  * policy spec validation and resolution;
+  * the hard regression: ``policy=None`` == ``policy="fixed"`` ==
+    ``RecoveryPolicy()`` bit-for-bit on both faulty drivers and both
+    engines — the policy layer must not perturb a single committed
+    number;
+  * the Jacobson/Karels estimator unit math (RFC 6298 gains, Karn's
+    rule, clamps, per-link state) and the end-to-end win at a mistuned
+    timeout;
+  * hedged conservation (hedges == suppressions + retransmissions) and
+    the bounded-duplicate p999 cut on faulty serving;
+  * overload shedding: admission depth caps, deadline shedding, request
+    conservation, the goodput plateau past saturation;
+  * the chaos-campaign harness (zero violations, replayable);
+  * the runtime retry loop sourcing the shared recovery constants.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import recovery as rc
+from repro.core import simulator as sim
+from repro.core.fabric import DEFAULT_NET
+from repro.core.faults import (MAX_DRAW_ENTRIES, DropDraws, FaultSpec,
+                               LinkDegrade, expected_retrans_s)
+from repro.experiments import chaos
+from repro.runtime import fault_tolerance as ft
+
+US = 1e-6
+
+# The committed recovery-sweep stencil point (specs.RECOVERY, level 1):
+# a mistuned 150 us timeout against ~3 us wire service.
+STENCIL = dict(dims=(4, 4), theta=8, face_bytes=[131072.0, 131072.0],
+               n_vcis=2)
+STENCIL_SPEC = FaultSpec(drop_prob=0.05, timeout_us=150.0, seed=3)
+# The committed faulty-serving point (poisson, so queue excursions do
+# not poison the hedge quantile).
+SERVING = dict(arrival="poisson", rate_rps=8000.0, n_requests=96,
+               n_tenants=4, skew=0.3, theta=8, part_bytes=16384.0,
+               n_vcis=4, compute_us=2.0, seed=2)
+SERVING_SPEC = FaultSpec(drop_prob=0.02, timeout_us=150.0, seed=2)
+# The committed shed point: 240 krps offered into a fabric that drains
+# ~90 krps — deep overload.
+SHED = dict(arrival="poisson", rate_rps=240000.0, n_requests=128,
+            n_tenants=2, theta=8, part_bytes=32768.0, n_vcis=2,
+            compute_us=2.0, seed=2)
+
+
+class TestPolicySpec:
+    def test_default_is_fixed(self):
+        assert rc.RecoveryPolicy().kind == "fixed"
+
+    @pytest.mark.parametrize("kw,field", [
+        (dict(kind="nope"), "kind"),
+        (dict(rto_min_us=0.0), "rto_min_us"),
+        (dict(rto_min_us=10.0, rto_max_us=5.0), "rto_max_us"),
+        (dict(srtt_gain=0.0), "srtt_gain"),
+        (dict(rttvar_gain=1.5), "rttvar_gain"),
+        (dict(rttvar_mult=0.0), "rttvar_mult"),
+        (dict(hedge_quantile=1.0), "hedge_quantile"),
+        (dict(hedge_mult=0.0), "hedge_mult"),
+    ])
+    def test_validation_names_the_field(self, kw, field):
+        with pytest.raises(ValueError, match=field):
+            rc.RecoveryPolicy(**kw)
+
+    def test_make_policy_resolution(self):
+        assert rc.make_policy(None).kind == "fixed"
+        assert rc.make_policy("adaptive").kind == "adaptive"
+        p = rc.RecoveryPolicy(kind="hedged", hedge_mult=3.0)
+        assert rc.make_policy(p) is p
+        with pytest.raises(TypeError, match="policy"):
+            rc.make_policy(42)
+
+    def test_fresh_state_kinds(self):
+        for kind in rc.POLICIES:
+            st = rc.RecoveryPolicy(kind=kind).fresh(50.0, 2.0)
+            assert st.policy.kind == kind
+            assert st.n_hedges == st.n_suppressed == 0
+
+
+class TestFixedIsBitwiseNoop:
+    """policy=None, policy='fixed' and RecoveryPolicy() are the same
+    run, bit for bit, on every driver and engine — the regression that
+    protects every committed baseline number."""
+
+    @pytest.mark.parametrize("engine", ["vector", "reference"])
+    def test_faulty_stencil(self, engine):
+        runs = [sim.simulate_faulty("part", faults=STENCIL_SPEC,
+                                    policy=p, engine=engine, **STENCIL)
+                for p in (None, "fixed", rc.RecoveryPolicy())]
+        a = runs[0]
+        for b in runs[1:]:
+            assert a.tts_s == b.tts_s
+            assert a.rank_tts_s == b.rank_tts_s
+            assert a.n_retransmits == b.n_retransmits
+            assert a.retrans_bytes == b.retrans_bytes
+            assert np.array_equal(a.arrival_s, b.arrival_s)
+        assert a.policy == "fixed"
+
+    @pytest.mark.parametrize("engine", ["vector", "reference"])
+    def test_faulty_serving(self, engine):
+        runs = [sim.simulate_serving("part", faults=SERVING_SPEC,
+                                     policy=p, engine=engine, **SERVING)
+                for p in (None, "fixed", rc.RecoveryPolicy())]
+        a = runs[0]
+        for b in runs[1:]:
+            assert a.tts_s == b.tts_s
+            assert np.array_equal(a.latency_s, b.latency_s)
+            assert a.n_retransmits == b.n_retransmits
+        assert a.policy == "fixed"
+
+    def test_drop_pattern_is_policy_invariant(self):
+        """Verdicts are (message, attempt)-pure: switching the recovery
+        clock reshapes the schedule, never the drop pattern."""
+        counts = {p: sim.simulate_faulty(
+            "part", faults=STENCIL_SPEC, policy=p,
+            **STENCIL).n_retransmits for p in rc.POLICIES}
+        assert len(set(counts.values())) == 1
+
+    @pytest.mark.parametrize("policy", ["adaptive", "hedged"])
+    def test_engines_agree_under_every_policy(self, policy):
+        v = sim.simulate_faulty("part", faults=STENCIL_SPEC,
+                                policy=policy, **STENCIL)
+        r = sim.simulate_faulty("part", faults=STENCIL_SPEC,
+                                policy=policy, engine="reference",
+                                **STENCIL)
+        assert v.tts_s == r.tts_s
+        assert v.rank_tts_s == r.rank_tts_s
+        assert v.n_hedges == r.n_hedges
+        assert v.duplicate_bytes == r.duplicate_bytes
+
+
+class TestAdaptiveEstimator:
+    """RFC 6298 math, sample by sample."""
+
+    def _observe(self, st, rtt_s, attempt=0, link=(0, 1)):
+        st.observe(np.array([link[0]]), np.array([link[1]]),
+                   np.array([0.0]), np.array([rtt_s]),
+                   np.array([1024.0]), attempt, np.array([True]))
+
+    def test_first_sample_seeds_srtt_and_rttvar(self):
+        st = rc.RecoveryPolicy(kind="adaptive").fresh(50.0, 2.0)
+        self._observe(st, 100e-6)
+        # srtt = rtt, rttvar = rtt/2, RTO = srtt + 4*rttvar = 3*rtt
+        assert st.rto_s(0, 1) == pytest.approx(300e-6)
+
+    def test_ewma_update_order(self):
+        st = rc.RecoveryPolicy(kind="adaptive").fresh(50.0, 2.0)
+        self._observe(st, 100e-6)
+        self._observe(st, 60e-6)
+        # rttvar = 0.75*50 + 0.25*|100-60| = 47.5 us (old srtt!),
+        # srtt = 0.875*100 + 0.125*60 = 95 us, RTO = 95 + 4*47.5 = 285
+        assert st.rto_s(0, 1) == pytest.approx(285e-6)
+
+    def test_karn_rule_skips_retransmitted_samples(self):
+        st = rc.RecoveryPolicy(kind="adaptive").fresh(50.0, 2.0)
+        self._observe(st, 100e-6, attempt=1)
+        assert st.rto_s(0, 1) == 50.0 * US  # still the fallback
+
+    def test_clamps(self):
+        st = rc.RecoveryPolicy(kind="adaptive").fresh(50.0, 2.0)
+        self._observe(st, 0.1e-6, link=(0, 1))   # RTO 0.3 us -> floor
+        self._observe(st, 200e-6, link=(2, 3))   # RTO 600 us -> ceiling
+        assert st.rto_s(0, 1) == 5.0 * US
+        assert st.rto_s(2, 3) == 400.0 * US
+
+    def test_per_link_state(self):
+        st = rc.RecoveryPolicy(kind="adaptive").fresh(50.0, 2.0)
+        self._observe(st, 10e-6, link=(0, 1))
+        self._observe(st, 40e-6, link=(1, 0))
+        assert st.rto_s(0, 1) == pytest.approx(30e-6)
+        assert st.rto_s(1, 0) == pytest.approx(120e-6)
+        assert st.rto_s(5, 6) == 50.0 * US  # unseen link: fallback
+
+    def test_retrans_times_anchor_and_backoff(self):
+        st = rc.RecoveryPolicy(kind="adaptive").fresh(50.0, 2.0)
+        self._observe(st, 10e-6)
+        t = st.retrans_times(np.array([0]), np.array([1]),
+                             np.array([0.0]), np.array([7e-6]), 2)
+        assert t[0] == pytest.approx(7e-6 + 30e-6 * 4.0)
+
+    def test_adaptive_beats_mistuned_fixed_end_to_end(self):
+        """The committed stencil point: a 150 us timeout against ~3 us
+        service.  The estimator collapses the recovery delay."""
+        fixed = sim.simulate_faulty("part", faults=STENCIL_SPEC,
+                                    **STENCIL)
+        adapt = sim.simulate_faulty("part", faults=STENCIL_SPEC,
+                                    policy="adaptive", **STENCIL)
+        assert adapt.tts_s < fixed.tts_s / 2
+        assert adapt.n_retransmits == fixed.n_retransmits
+        assert adapt.tts_s >= adapt.clean_tts_s
+
+
+class TestHedged:
+    def test_delay_falls_back_to_timeout(self):
+        st = rc.RecoveryPolicy(kind="hedged").fresh(50.0, 2.0)
+        t = st.retrans_times(np.array([0]), np.array([1]),
+                             np.array([3e-6]), np.array([9e-6]), 0)
+        assert t[0] == pytest.approx(3e-6 + 50.0 * US)  # send-anchored
+
+    def test_quantile_delay_and_suppression_accounting(self):
+        st = rc.RecoveryPolicy(kind="hedged").fresh(50.0, 2.0)
+        # Seed the estimator: one 10 us delivery -> delay = 2 * 10 us.
+        st.observe(np.array([0]), np.array([1]), np.array([0.0]),
+                   np.array([10e-6]), np.array([512.0]), 0,
+                   np.array([True]))
+        # One delivery slower than the 20 us hedge (raced, suppressed)
+        # and one drop (the hedge becomes the retransmission).
+        st.observe(np.array([0, 0]), np.array([1, 1]),
+                   np.array([0.0, 0.0]), np.array([30e-6, 25e-6]),
+                   np.array([512.0, 2048.0]), 0,
+                   np.array([True, False]))
+        assert (st.n_hedges, st.n_suppressed) == (2, 1)
+        assert st.duplicate_bytes == 512.0
+        # Re-entry uses the round-start snapshot, anchored at submission.
+        t = st.retrans_times(np.array([0]), np.array([1]),
+                             np.array([0.0]), np.array([25e-6]), 0)
+        assert t[0] == pytest.approx(20e-6)
+
+    def test_conservation_end_to_end(self):
+        r = sim.simulate_faulty("part", faults=STENCIL_SPEC,
+                                policy="hedged", **STENCIL)
+        assert r.n_hedges == r.n_suppressed + r.n_retransmits
+        assert r.duplicate_bytes >= 0.0
+
+    def test_hedged_cuts_serving_p999_at_bounded_duplicates(self):
+        """The committed serving point: p999 drops, and the total
+        resent payload (retransmissions + wasted hedges) stays within
+        2x the fixed policy's retransmission bytes."""
+        fixed = sim.simulate_serving("part", faults=SERVING_SPEC,
+                                     **SERVING)
+        hedged = sim.simulate_serving("part", faults=SERVING_SPEC,
+                                      policy="hedged", **SERVING)
+        assert hedged.p999_s < fixed.p999_s
+        ratio = ((hedged.retrans_bytes + hedged.duplicate_bytes)
+                 / fixed.retrans_bytes)
+        assert ratio <= 2.0
+        assert hedged.n_hedges == hedged.n_suppressed \
+            + hedged.n_retransmits
+
+
+class TestOverloadShedding:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="queue_depth"):
+            sim.simulate_serving("part", queue_depth=0, **SHED)
+        with pytest.raises(ValueError, match="deadline_us"):
+            sim.simulate_serving("part", deadline_us=0.0, **SHED)
+
+    def test_loose_limits_are_a_bitwise_noop(self):
+        base = sim.simulate_serving("part", **SHED)
+        loose = sim.simulate_serving("part", queue_depth=10 ** 6,
+                                     deadline_us=1e9, **SHED)
+        assert loose.n_shed == 0
+        assert loose.tts_s == base.tts_s
+        assert np.array_equal(loose.latency_s, base.latency_s)
+
+    def test_shedding_bounds_the_tail_past_saturation(self):
+        """Deep overload (240 krps into a ~90 krps fabric): unprotected
+        p99 blows up with queueing; depth caps + deadline shedding hold
+        it flat and retain most of the in-deadline goodput."""
+        base = sim.simulate_serving("part", **SHED)
+        shed = sim.simulate_serving("part", queue_depth=6,
+                                    deadline_us=300.0, **SHED)
+        assert shed.n_shed > 0
+        assert shed.completed + shed.n_shed == shed.n_requests
+        assert shed.p99_s < base.p99_s / 2
+        assert 0.0 < shed.goodput_retention < 1.0
+        assert base.goodput_retention == 1.0  # no deadline -> all good
+
+    def test_plateau_as_load_doubles(self):
+        """The protected tail is insensitive to offered load; the
+        unprotected one is not."""
+        kw = dict(SHED)
+        del kw["rate_rps"]
+        tails = {}
+        for rate in (120000.0, 240000.0):
+            b = sim.simulate_serving("part", rate_rps=rate, **kw)
+            s = sim.simulate_serving("part", rate_rps=rate,
+                                     queue_depth=6, deadline_us=300.0,
+                                     **kw)
+            tails[rate] = (b.p99_s, s.p99_s)
+        assert tails[240000.0][0] > 2 * tails[120000.0][0]
+        assert tails[240000.0][1] < 1.5 * tails[120000.0][1]
+
+    def test_engines_agree_with_shedding(self):
+        v = sim.simulate_serving("part", queue_depth=6,
+                                 deadline_us=300.0, **SHED)
+        r = sim.simulate_serving("part", queue_depth=6,
+                                 deadline_us=300.0, engine="reference",
+                                 **SHED)
+        assert v.tts_s == r.tts_s
+        assert v.n_shed == r.n_shed
+        assert np.array_equal(v.latency_s, r.latency_s)
+
+
+class TestPlannerPolicyTerm:
+    MSGS = [(65536.0, 4, 16)]
+    SPEC = FaultSpec(drop_prob=0.1)
+
+    def test_fixed_policy_is_bitwise_identity(self):
+        base = expected_retrans_s(self.MSGS, self.SPEC, DEFAULT_NET)
+        fixed = expected_retrans_s(self.MSGS, self.SPEC, DEFAULT_NET,
+                                   policy=rc.RecoveryPolicy())
+        assert base == fixed
+
+    def test_adaptive_term_is_cheaper_at_mistuned_timeout(self):
+        base = expected_retrans_s(self.MSGS, self.SPEC, DEFAULT_NET)
+        adapt = expected_retrans_s(self.MSGS, self.SPEC, DEFAULT_NET,
+                                   policy=rc.make_policy("adaptive"))
+        assert adapt < base
+
+    def test_plan_auto_accepts_policy_names(self):
+        from repro.core.commplan import plan_auto
+        spec = FaultSpec(drop_prob=0.05)
+        _, fixed = plan_auto(1 << 22, n_threads=4, faults=spec)
+        _, adapt = plan_auto(1 << 22, n_threads=4, faults=spec,
+                             policy="adaptive")
+        t_fixed = dict(fixed.terms)["retrans"]
+        t_adapt = dict(adapt.terms)["retrans"]
+        assert t_adapt < t_fixed
+
+
+class TestChaosHarness:
+    def test_campaigns_hold_invariants(self):
+        report = chaos.run_campaigns(16, seed=1)
+        assert report["n_violations"] == 0
+        assert report["violations"] == []
+        assert report["n_campaigns"] == 16
+        assert sum(report["by_policy"].values()) == 16
+        assert 0 < report["n_serving"] < 16
+
+    def test_campaign_is_replayable_from_its_index(self):
+        a = chaos.run_campaign(5, seed=1)
+        b = chaos.run_campaign(5, seed=1)
+        assert a == b
+
+    def test_seed_changes_the_samples(self):
+        a = chaos.run_campaign(2, seed=1)
+        b = chaos.run_campaign(2, seed=2)
+        assert a["drop_prob"] != b["drop_prob"]
+
+    def test_rejects_empty_sweep(self):
+        with pytest.raises(ValueError, match="campaign"):
+            chaos.run_campaigns(0)
+
+    def test_cli_writes_report(self, tmp_path, capsys):
+        from benchmarks.chaos import main
+        out = tmp_path / "chaos.json"
+        assert main(["--campaigns", "4", "--out", str(out)]) == 0
+        assert "0 violations" in capsys.readouterr().out
+        import json
+        assert json.loads(out.read_text())["n_violations"] == 0
+
+
+class TestRuntimeSharedConstants:
+    """Satellite: runtime.fault_tolerance sources its retry knobs from
+    the shared recovery defaults — one source of truth."""
+
+    def test_constants_are_the_recovery_defaults(self):
+        assert ft.RETRY_MAX_ATTEMPTS == rc.DEFAULT_MAX_RETRIES
+        assert ft.RETRY_BACKOFF == rc.DEFAULT_BACKOFF
+        assert ft.RETRY_BASE_DELAY_S == rc.DEFAULT_TIMEOUT_US * 1e-3
+        assert ft.HEARTBEAT_STALE_FACTOR == rc.DEFAULT_BACKOFF
+
+    def test_retry_transient_backs_off_and_succeeds(self):
+        sleeps, calls = [], []
+
+        def flaky():
+            calls.append(1)
+            if len(calls) < 3:
+                raise OSError("transient")
+            return "ok"
+
+        out = ft.retry_transient(flaky, max_attempts=5, backoff=2.0,
+                                 base_delay_s=0.1, sleep=sleeps.append)
+        assert out == "ok"
+        assert sleeps == pytest.approx([0.1, 0.2])
+
+    def test_retry_transient_exhausts_and_reraises(self):
+        sleeps = []
+
+        def dead():
+            raise OSError("permanent")
+
+        with pytest.raises(OSError, match="permanent"):
+            ft.retry_transient(dead, max_attempts=3, base_delay_s=0.01,
+                               sleep=sleeps.append)
+        assert len(sleeps) == 2  # the last attempt re-raises, no sleep
+
+    def test_retry_transient_validates(self):
+        with pytest.raises(ValueError, match="max_attempts"):
+            ft.retry_transient(lambda: None, max_attempts=0)
+
+    def test_heartbeat_staleness_uses_shared_factor(self, tmp_path):
+        hb = ft.Heartbeat(tmp_path / "hb.json", interval=3.0)
+        assert hb.stale_after() == ft.HEARTBEAT_STALE_FACTOR * 3.0
+
+
+class TestFaultSpecValidationSatellites:
+    def test_negative_degradation_start_named(self):
+        with pytest.raises(ValueError, match="t_start_us"):
+            LinkDegrade(t_start_us=-1.0, t_end_us=10.0, factor=0.5)
+
+    def test_drop_draws_allocation_cap_named(self):
+        spec = FaultSpec(drop_prob=0.1, max_retries=8)
+        too_many = MAX_DRAW_ENTRIES // spec.max_retries + 1
+        with pytest.raises(ValueError, match="MAX_DRAW_ENTRIES"):
+            DropDraws(spec, too_many)
+
+    def test_drop_draws_under_cap_is_fine(self):
+        spec = FaultSpec(drop_prob=0.1, max_retries=2)
+        d = DropDraws(spec, 64)
+        assert d.u.shape == (64, 2)
